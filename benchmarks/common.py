@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, CSV rows, output locations."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def ensure_out(sub: str = "") -> str:
+    d = os.path.join(OUT_DIR, sub) if sub else OUT_DIR
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def time_us(fn: Callable[[], object], *, repeats: int = 5,
+            warmup: int = 1) -> float:
+    """Median wall-time of fn() in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: list[tuple], header: bool = False) -> None:
+    """Print ``name,us_per_call,derived`` CSV rows (the harness contract)."""
+    if header:
+        print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")
+
+
+def save_json(sub: str, name: str, obj) -> str:
+    d = ensure_out(sub)
+    path = os.path.join(d, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    return path

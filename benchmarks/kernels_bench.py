@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: wall time (interpret mode on CPU -- relative
+numbers only; on TPU pass REPRO_PALLAS_COMPILE=1) plus the analytic MXU
+utilisation each BlockSpec tiling would claim on v5e."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_us
+from repro.core.hardware import V5E_PEAK_FLOPS_BF16
+from repro.kernels import ops, ref
+
+
+def run_all() -> list[tuple]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: seq 512, hd 128 (MXU-aligned)
+    B, S, H, KV, hd = 1, 512, 4, 2, 128
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd),
+                          jnp.float32) * 0.3
+    us = time_us(lambda: jax.block_until_ready(
+        ops.flash_attention_gqa(q, k, v)), repeats=3)
+    flops = 2 * B * H * S * S * hd * 2 / 2        # causal halves the work
+    rows.append(("kernels.flash_attention.512x128", us,
+                 f"analytic_v5e_us={flops / V5E_PEAK_FLOPS_BF16 * 1e6:.2f}"))
+
+    # reference attention for the same shape (oracle cost)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = jnp.repeat(k, H // KV, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = jnp.repeat(v, H // KV, 2).transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    jref = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c))
+    us = time_us(lambda: jax.block_until_ready(jref(qf, kf, vf)), repeats=3)
+    rows.append(("kernels.attention_ref.512x128", us, "xla_dense"))
+
+    # conv2d: AlexNet conv2 shape
+    x = jax.random.normal(key, (1, 64, 27, 27), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 3), (192, 64, 5, 5),
+                          jnp.float32) * 0.1
+    us = time_us(lambda: jax.block_until_ready(
+        ops.conv2d(x, w, stride=1, pad=2)), repeats=3)
+    flops = 2 * 25 * 64 * 192 * 27 * 27
+    rows.append(("kernels.conv2d.alexnet_conv2", us,
+                 f"analytic_v5e_us={flops / V5E_PEAK_FLOPS_BF16 * 1e6:.2f}"))
+    jconv = jax.jit(lambda a, b: ref.conv2d_ref(a, b, stride=1, pad=2))
+    us = time_us(lambda: jax.block_until_ready(jconv(x, w)), repeats=3)
+    rows.append(("kernels.conv2d_ref.alexnet_conv2", us, "xla_conv"))
+
+    # rwkv6 wkv: 64 tokens x 2 heads
+    b, t, h, hd2 = 1, 64, 2, 64
+    r = jax.random.normal(key, (b, t, h, hd2)) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(key, 4), (b, t, h, hd2)) * 0.3
+    vv = jax.random.normal(jax.random.fold_in(key, 5), (b, t, h, hd2)) * 0.3
+    ww = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 6),
+                                          (b, t, h, hd2))) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(key, 7), (h, hd2)) * 0.1
+    us = time_us(lambda: jax.block_until_ready(
+        ops.rwkv6_wkv(r, kk, vv, ww, u, block_t=32)), repeats=3)
+    rows.append(("kernels.rwkv6_wkv.64tok", us, "interpret"))
+
+    # mamba2 ssd: 128 tokens
+    x2 = jax.random.normal(key, (1, 128, 2, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 8),
+                                           (1, 128, 2)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 9), (2,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 10), (1, 128, 2, 16)) * 0.4
+    Cm = jax.random.normal(jax.random.fold_in(key, 11), (1, 128, 2, 16)) * 0.4
+    us = time_us(lambda: jax.block_until_ready(
+        ops.mamba2_ssd(x2, dt, A, Bm, Cm, chunk=64)), repeats=3)
+    rows.append(("kernels.mamba2_ssd.128tok", us, "interpret"))
+    return rows

@@ -1,0 +1,199 @@
+"""Paper reproduction benchmarks: Table I, Table II, Fig 6, Figs 7-9,
+Fig 10, and the pilot-study curves (Figs 1-5) -- all model-derived, on the
+paper's Samsung-J6 + 10 Mbps + i5-server environment.
+
+Each ``run_*`` returns CSV rows (name, us_per_call, derived) and persists
+full JSON artefacts under benchmarks/out/paper/."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json, time_us
+from repro.core import (ALGORITHMS, PAPER_ENV_J6, PAPER_ENV_NOTE8,
+                        energy_terms, evaluate_objectives, latency_terms,
+                        smartsplit, smartsplit_exhaustive)
+from repro.models.profiles import cnn_profile
+
+TABLE1_MODELS = ["alexnet", "vgg11", "vgg13", "vgg16"]
+PAPER_TABLE1 = {"alexnet": 3, "vgg11": 11, "vgg13": 10, "vgg16": 10}
+PAPER_TABLE2 = {"LBO": {"alexnet": 3, "vgg11": 21, "vgg13": 20, "vgg16": 25},
+                "EBO": {"alexnet": 6, "vgg11": 11, "vgg13": 15, "vgg16": 17}}
+# Published ImageNet top-1 (%) -- accuracy cannot be re-measured offline;
+# the paper's Fig 10 claim is "split VGG16 ~10% more accurate than
+# MobileNetV2 (their test set)"; on ImageNet the published gap direction
+# matches for AlexNet vs both.
+PUBLISHED_TOP1 = {"alexnet": 56.5, "vgg11": 69.0, "vgg13": 69.9,
+                  "vgg16": 71.6, "mobilenetv2": 71.9}
+
+
+def run_table1() -> list[tuple]:
+    """Table I: optimal split layer per model (GA+TOPSIS), both memory
+    countings, plus the GA's wall time."""
+    rows = []
+    art = {}
+    for name in TABLE1_MODELS:
+        p = cnn_profile(name)
+        us = time_us(lambda p=p: smartsplit(p, PAPER_ENV_J6), repeats=3)
+        plan_full = smartsplit(p, PAPER_ENV_J6, f3_mode="full")
+        plan_cal = smartsplit(p, PAPER_ENV_J6, f3_mode="activations")
+        rows.append((f"table1.{name}.split_calibrated", us,
+                     plan_cal.split_index))
+        rows.append((f"table1.{name}.split_literal", None,
+                     plan_full.split_index))
+        rows.append((f"table1.{name}.paper", None, PAPER_TABLE1[name]))
+        rows.append((f"table1.{name}.paper_in_pareto", None,
+                     int(PAPER_TABLE1[name] in plan_full.pareto_indices)))
+        art[name] = {"calibrated": plan_cal.split_index,
+                     "literal": plan_full.split_index,
+                     "paper": PAPER_TABLE1[name],
+                     "pareto": sorted(plan_full.pareto_indices)}
+    save_json("paper", "table1.json", art)
+    return rows
+
+
+def run_table2() -> list[tuple]:
+    """Table II: split index per competing algorithm."""
+    rows = []
+    art = {}
+    rng = np.random.default_rng(0)
+    for name in TABLE1_MODELS:
+        p = cnn_profile(name)
+        entry = {}
+        for alg, fn in ALGORITHMS.items():
+            idx = fn(p, PAPER_ENV_J6, rng) if alg == "RS" \
+                else fn(p, PAPER_ENV_J6)
+            entry[alg] = idx
+            rows.append((f"table2.{name}.{alg}", None, idx))
+        entry["SmartSplit"] = smartsplit_exhaustive(
+            p, PAPER_ENV_J6, f3_mode="activations").split_index
+        rows.append((f"table2.{name}.SmartSplit", None, entry["SmartSplit"]))
+        art[name] = entry
+    save_json("paper", "table2.json", art)
+    return rows
+
+
+def run_fig6_pareto() -> list[tuple]:
+    """Fig 6: normalised (latency, energy, memory) of every Pareto-set
+    solution per model."""
+    art = {}
+    rows = []
+    for name in TABLE1_MODELS:
+        p = cnn_profile(name)
+        plan = smartsplit_exhaustive(p, PAPER_ENV_J6)
+        F = np.asarray(plan.pareto_F, float)
+        Fn = F / F.max(axis=0)
+        art[name] = {"split_indices": list(plan.pareto_indices),
+                     "normalised_F": Fn.tolist()}
+        rows.append((f"fig6.{name}.pareto_size", None,
+                     len(plan.pareto_indices)))
+    save_json("paper", "fig6_pareto.json", art)
+    return rows
+
+
+def run_fig789_compare() -> list[tuple]:
+    """Figs 7-9: latency / energy / memory achieved by each algorithm,
+    averaged over 100 runs (only RS varies across runs, as in the paper)."""
+    rows = []
+    art = {}
+    rng = np.random.default_rng(1)
+    runs = 100
+    for name in TABLE1_MODELS:
+        p = cnn_profile(name)
+        F = evaluate_objectives(p, PAPER_ENV_J6)
+        splits = {"SmartSplit": smartsplit_exhaustive(
+            p, PAPER_ENV_J6, f3_mode="activations").split_index}
+        for alg in ("LBO", "EBO", "COS", "COC"):
+            splits[alg] = ALGORITHMS[alg](p, PAPER_ENV_J6)
+        art[name] = {}
+        for alg, idx in splits.items():
+            lat, en, mem = F[idx]
+            art[name][alg] = {"split": idx, "latency_s": lat,
+                              "energy_j": en, "memory_mb": mem / 2**20}
+            rows.append((f"fig7.{name}.{alg}.latency_s", None,
+                         round(float(lat), 4)))
+            rows.append((f"fig8.{name}.{alg}.energy_j", None,
+                         round(float(en), 4)))
+            rows.append((f"fig9.{name}.{alg}.memory_mb", None,
+                         round(float(mem) / 2**20, 3)))
+        # RS: average of 100 random splits
+        rs_idx = rng.integers(1, p.num_layers, runs)
+        lat, en, mem = F[rs_idx].mean(axis=0)
+        art[name]["RS"] = {"split": "random", "latency_s": lat,
+                           "energy_j": en, "memory_mb": mem / 2**20}
+        rows.append((f"fig7.{name}.RS.latency_s", None, round(float(lat), 4)))
+        rows.append((f"fig8.{name}.RS.energy_j", None, round(float(en), 4)))
+        rows.append((f"fig9.{name}.RS.memory_mb", None,
+                     round(float(mem) / 2**20, 3)))
+    save_json("paper", "fig789_compare.json", art)
+    return rows
+
+
+def run_fig10_mobilenet() -> list[tuple]:
+    """Fig 10: SmartSplit-split models vs MobileNetV2-on-device (COS) vs
+    VGG16-on-device. Accuracy = published top-1 constants (documented)."""
+    rows = []
+    art = {}
+    for name in TABLE1_MODELS + ["mobilenetv2"]:
+        p = cnn_profile(name)
+        F = evaluate_objectives(p, PAPER_ENV_J6)
+        if name == "mobilenetv2":
+            idx = p.num_layers            # COS: all on the phone
+        else:
+            idx = smartsplit_exhaustive(p, PAPER_ENV_J6,
+                                        f3_mode="activations").split_index
+        lat, en, mem = F[idx]
+        art[name] = {"mode": "COS" if name == "mobilenetv2" else "split",
+                     "split": idx, "latency_s": lat, "energy_j": en,
+                     "memory_mb": mem / 2**20,
+                     "published_top1": PUBLISHED_TOP1[name]}
+        for metric, val in (("latency_s", lat), ("energy_j", en),
+                            ("memory_mb", mem / 2**20),
+                            ("top1", PUBLISHED_TOP1[name])):
+            rows.append((f"fig10.{name}.{metric}", None,
+                         round(float(val), 4)))
+    # VGG16 fully on device for the COS comparison bar
+    p = cnn_profile("vgg16")
+    F = evaluate_objectives(p, PAPER_ENV_J6)
+    lat, en, mem = F[p.num_layers]
+    art["vgg16_cos"] = {"latency_s": lat, "energy_j": en,
+                        "memory_mb": mem / 2**20}
+    rows.append(("fig10.vgg16_cos.latency_s", None, round(float(lat), 4)))
+    save_json("paper", "fig10_mobilenet.json", art)
+    return rows
+
+
+def run_pilot_curves() -> list[tuple]:
+    """Figs 1-5 (pilot study), model-derived: per-split latency and energy
+    decompositions for both phones; persisted for plotting."""
+    rows = []
+    art = {}
+    for env_name, env in (("j6", PAPER_ENV_J6), ("note8", PAPER_ENV_NOTE8)):
+        art[env_name] = {}
+        for name in TABLE1_MODELS:
+            p = cnn_profile(name)
+            t_c, t_u, t_s, _ = latency_terms(p, env)
+            e_c, e_u, e_d = energy_terms(p, env)
+            art[env_name][name] = {
+                "client_latency": t_c.tolist(),
+                "upload_latency": t_u.tolist(),
+                "server_latency": t_s.tolist(),
+                "client_energy": e_c.tolist(),
+                "upload_energy": e_u.tolist(),
+                "download_energy": e_d.tolist(),
+            }
+        # headline claims
+        p = cnn_profile("vgg16")
+        t_c, t_u, t_s, _ = latency_terms(p, env)
+        mid = p.num_layers // 3
+        rows.append((f"pilot.{env_name}.vgg16.upload_dominates_early", None,
+                     int(t_u[mid] > t_c[mid] and t_u[mid] > t_s[mid])))
+    save_json("paper", "pilot_curves.json", art)
+    return rows
+
+
+def run_all() -> list[tuple]:
+    rows = []
+    for fn in (run_table1, run_table2, run_fig6_pareto, run_fig789_compare,
+               run_fig10_mobilenet, run_pilot_curves):
+        rows += fn()
+    return rows

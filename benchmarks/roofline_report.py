@@ -1,0 +1,65 @@
+"""Roofline report (deliverable g): reads the dry-run JSON artefacts and
+emits the three-term roofline per (arch x shape x mesh), the dominant
+bottleneck, and the useful-FLOPs ratio.  Also prints the formatted table
+consumed by EXPERIMENTS.md section Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_json
+from repro.analysis.roofline import Roofline, format_table, from_record
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec or "error" in rec:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def rooflines(mesh: str = "single16x16") -> list[Roofline]:
+    return [from_record(r) for r in load_records(mesh)]
+
+
+def run_all() -> list[tuple]:
+    rows = []
+    table = []
+    for mesh in ("single16x16", "multi2x16x16"):
+        rls = rooflines(mesh)
+        for r in rls:
+            key = f"roofline.{mesh}.{r.arch}.{r.shape}"
+            rows.append((f"{key}.bound_s", None, f"{r.bound_s:.5f}"))
+            rows.append((f"{key}.dominant", None, r.dominant))
+            rows.append((f"{key}.useful_ratio", None,
+                         f"{r.useful_ratio:.3f}"))
+            rows.append((f"{key}.gb_per_device", None,
+                         f"{r.bytes_per_device / 2**30:.2f}"))
+            table.append({
+                "arch": r.arch, "shape": r.shape, "mesh": r.mesh,
+                "compute_s": r.compute_s, "memory_s": r.memory_s,
+                "collective_s": r.collective_s, "dominant": r.dominant,
+                "useful_ratio": r.useful_ratio,
+                "gb_per_device": r.bytes_per_device / 2**30,
+                "fits_hbm": r.hbm_budget_ok,
+            })
+        if rls:
+            print(f"\n== roofline ({mesh}) ==")
+            print(format_table(rls))
+    skips = [json.load(open(p)) for p in
+             sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+             if "skipped" in json.load(open(p))]
+    for s in skips:
+        rows.append((f"roofline.{s['mesh']}.{s['arch']}.{s['shape']}.skip",
+                     None, s["skipped"]))
+    save_json("", "roofline_table.json", table)
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator. One section per paper table/figure plus the
+beyond-paper roofline/kernel/TPU-split reports.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract); full
+artefacts are written to benchmarks/out/."""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    sections = {}
+
+    from benchmarks import paper_tables
+    sections["paper"] = paper_tables.run_all
+
+    try:
+        from benchmarks import kernels_bench
+        sections["kernels"] = kernels_bench.run_all
+    except ImportError:
+        pass
+    try:
+        from benchmarks import roofline_report
+        sections["roofline"] = roofline_report.run_all
+    except ImportError:
+        pass
+    try:
+        from benchmarks import tpu_split
+        sections["tpu_split"] = tpu_split.run_all
+    except ImportError:
+        pass
+    try:
+        from benchmarks import multicut_bench
+        sections["multicut"] = multicut_bench.run_all
+    except ImportError:
+        pass
+
+    emit([], header=True)
+    for name, fn in sections.items():
+        if only and name != only:
+            continue
+        emit(fn())
+
+
+if __name__ == "__main__":
+    main()

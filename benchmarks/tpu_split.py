@@ -1,0 +1,46 @@
+"""Beyond-paper: SmartSplit plans for the assigned transformer
+architectures on the TPU edge+cloud two-tier profile.
+
+For each decoder arch x serving mode, plan the split with the full
+Algorithm 1 (GA front + TOPSIS) and report the chosen boundary, the
+objective triple, and how it compares against the LBO/EBO/COS/COC
+baselines -- the paper's Table II transplanted to the TPU fleet."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save_json, time_us
+from repro.configs import all_configs
+from repro.core import (ALGORITHMS, TPU_EDGE_CLOUD, evaluate_objectives,
+                        smartsplit_exhaustive)
+from repro.models.profiles import transformer_profile
+
+MODES = [("prefill", 32768, 8), ("decode", 32768, 32)]
+
+
+def run_all() -> list[tuple]:
+    rows = []
+    art = {}
+    for arch, cfg in sorted(all_configs().items()):
+        if cfg.is_encoder:
+            continue
+        art[arch] = {}
+        for mode, seq, batch in MODES:
+            prof = transformer_profile(cfg, seq_len=seq, batch=batch,
+                                       mode=mode)
+            plan = smartsplit_exhaustive(prof, TPU_EDGE_CLOUD)
+            F = evaluate_objectives(prof, TPU_EDGE_CLOUD)
+            entry = {"l1": plan.split_index, "L": prof.num_layers,
+                     "latency_s": plan.objectives[0],
+                     "energy_j": plan.objectives[1],
+                     "edge_mem_gb": plan.objectives[2] / 2**30,
+                     "pareto_size": len(plan.pareto_indices)}
+            for alg in ("LBO", "EBO", "COS", "COC"):
+                entry[alg] = int(ALGORITHMS[alg](prof, TPU_EDGE_CLOUD))
+            art[arch][mode] = entry
+            rows.append((f"tpu_split.{arch}.{mode}.l1", None,
+                         f"{plan.split_index}/{prof.num_layers}"))
+            rows.append((f"tpu_split.{arch}.{mode}.latency_s", None,
+                         f"{plan.objectives[0]:.4f}"))
+    save_json("", "tpu_split.json", art)
+    return rows

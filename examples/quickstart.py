@@ -1,0 +1,62 @@
+"""Quickstart: the paper in one minute.
+
+1. Build the per-layer cost profile of AlexNet (the paper's Table-I model).
+2. Run SmartSplit (NSGA-II + TOPSIS) on the paper's smartphone environment.
+3. Execute the actual split CNN inference in JAX and verify the boundary
+   payload matches the optimiser's I|l1 term and the logits match the
+   monolithic network.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PAPER_ENV_J6, evaluate_objectives, smartsplit,
+                        total_energy, total_latency)
+from repro.models import cnn
+from repro.models.profiles import cnn_profile
+
+
+def main():
+    name = "alexnet"
+    profile = cnn_profile(name)
+    print(f"{name}: {profile.num_layers} layers "
+          f"(paper counts 21 for AlexNet)")
+
+    # --- the optimiser -----------------------------------------------------
+    plan = smartsplit(profile, PAPER_ENV_J6, f3_mode="activations")
+    lat, en, mem = plan.objectives
+    print(f"SmartSplit split index l1 = {plan.split_index} "
+          f"(paper Table I: 3)")
+    print(f"  predicted latency {lat:.3f}s  energy {en:.3f}J  "
+          f"client memory {mem / 2**20:.2f} MiB")
+    print(f"  Pareto set: {sorted(plan.pareto_indices)}")
+
+    # --- the runtime -------------------------------------------------------
+    layers = cnn.CNN_MODELS[name]
+    params = cnn.init_cnn(jax.random.PRNGKey(0), layers)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 224, 224)) * 0.1
+
+    full_logits = cnn.apply_cnn(layers, params, x)
+    split_logits, boundary = cnn.apply_split(layers, params, x,
+                                             plan.split_index)
+    np.testing.assert_allclose(np.asarray(split_logits),
+                               np.asarray(full_logits), rtol=1e-5,
+                               atol=1e-5)
+    sent = boundary.size * 4
+    modelled = profile.boundary()[plan.split_index]
+    print(f"boundary payload: runtime {sent} B == model {modelled:.0f} B")
+    assert sent == modelled
+    print("split execution matches monolithic network: OK")
+
+    # --- the trade-off curve ----------------------------------------------
+    F = evaluate_objectives(profile, PAPER_ENV_J6)
+    print("\n l1   latency_s  energy_J  memory_MiB")
+    for l1 in sorted(set([1, 3, 6, 13, 20])):
+        print(f"{l1:3d}   {F[l1, 0]:9.3f} {F[l1, 1]:9.3f} "
+              f"{F[l1, 2] / 2**20:11.2f}")
+
+
+if __name__ == "__main__":
+    main()

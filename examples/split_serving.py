@@ -1,0 +1,82 @@
+"""End-to-end serving driver (the paper's kind: inference).
+
+Serves a small qwen3-family model with batched requests through the
+bucketed engine, THEN plans a SmartSplit two-tier placement for the same
+model on the TPU edge+cloud profile and executes the split across a 2-pod
+host-device mesh with the shard_map executor, verifying split == monolithic
+logits and reporting the boundary bytes against the plan's prediction.
+
+Run:  PYTHONPATH=src python examples/split_serving.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs
+from repro.core import TPU_EDGE_CLOUD, smartsplit
+from repro.launch.smartsplit_exec import two_stage_apply
+from repro.models import transformer as T
+from repro.models.profiles import transformer_profile
+from repro.serving.engine import Engine
+
+
+def main():
+    cfg = dataclasses.replace(all_configs()["qwen3-4b"].reduced(),
+                              num_layers=4, name="qwen3-mini")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    # ---- batched serving ---------------------------------------------------
+    eng = Engine(cfg, params, max_len=96, max_batch=4)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(10):
+        plen = int(rng.choice([8, 8, 8, 16, 16, 24]))
+        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        reqs.append(eng.submit(prompt, max_new_tokens=8))
+    t0 = time.time()
+    eng.run_until_idle()
+    dt = time.time() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
+    print(f"served {done}/10 requests, {toks} tokens in {dt:.1f}s "
+          f"({eng.stats['batches']:.0f} batches, bucketed by length)")
+    assert done == 10
+
+    # ---- SmartSplit plan on the TPU two-tier profile ------------------------
+    prof = transformer_profile(cfg, seq_len=32, batch=4, mode="prefill",
+                               dtype_bytes=4)   # example runs f32
+    plan = smartsplit(prof, TPU_EDGE_CLOUD)
+    print(f"SmartSplit plan for {cfg.name}: l1={plan.split_index}/"
+          f"{cfg.num_layers} layers on the edge pod "
+          f"(boundary {prof.boundary()[plan.split_index]:.0f} B predicted)")
+
+    # ---- execute the split across the pod axis -----------------------------
+    mesh = jax.make_mesh((2,), ("pod",))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                              cfg.vocab_size)
+    mono, _, _ = T.forward(cfg, params, {"tokens": toks}, mode="train")
+    split = two_stage_apply(cfg, params, toks, mesh, plan.split_index)
+    np.testing.assert_allclose(np.asarray(split), np.asarray(mono),
+                               rtol=2e-3, atol=2e-3)
+    print("two-stage (pod0=edge, pod1=cloud) logits match monolithic: OK")
+
+    # boundary payload actually transferred = hidden state bytes
+    actual = 4 * 32 * cfg.d_model * 4   # B x S x d, f32
+    print(f"boundary activation transferred per ppermute: {actual} B")
+
+    # ---- pipelined variant (beyond-paper) -----------------------------------
+    piped = two_stage_apply(cfg, params, toks, mesh, plan.split_index,
+                            pipelined=True, microbatches=2)
+    np.testing.assert_allclose(np.asarray(piped), np.asarray(mono),
+                               rtol=2e-3, atol=2e-3)
+    print("GPipe-style microbatched split matches monolithic: OK")
+
+
+if __name__ == "__main__":
+    main()

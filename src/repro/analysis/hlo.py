@@ -1,0 +1,70 @@
+"""Compiled-HLO text analysis: collective-bytes accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled module text and sum the result-shape bytes of every collective op,
+bucketed by op kind.  Methodology notes:
+
+* result-shape bytes is the per-device payload of the op; wire traffic per
+  device is ~(n-1)/n of that for all-gather/reduce-scatter and ~2(n-1)/n
+  for ring all-reduce -- the roofline divides by per-chip link bandwidth,
+  so result bytes is the right order-zero proxy and we report the raw sum
+  (consistent across iterations, which is what the hillclimb compares).
+* async pairs (-start/-done) are counted once (the -start carries the op).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes per collective kind over the whole module.
+    '-done' ops are skipped (their '-start' counterpart was counted)."""
+    out: dict[str, float] = defaultdict(float)
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(type_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> dict[str, int]:
+    out: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        out[m.group(2)] += 1
+    return dict(out)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    """Count occurrences of a given HLO op (e.g. 'fusion', 'transpose')."""
+    return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,96 @@
+"""Three-term roofline from dry-run artefacts (DESIGN.md section 7).
+
+  compute    = total_FLOPs    / (chips x 197e12)
+  memory     = total_HBM_bytes/ (chips x 819e9)
+  collective = collective_bytes / (chips x 50e9)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+numbers (verified experimentally in this repo), so totals = per_device x
+chips and the chips cancel: the terms below use per-device numbers
+directly.  MODEL_FLOPS uses the analytic 6*N_active*D (train) / 2*N_active*D
+(inference) so the useful-work ratio exposes remat/dispatch overheads."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hardware import (ICI_LINK_BW, TPU_PJ_PER_FLOP,
+                                 TPU_PJ_PER_HBM_BYTE, TPU_PJ_PER_ICI_BYTE,
+                                 V5E_HBM_BW, V5E_PEAK_FLOPS_BF16)
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    bytes_per_device: float
+    hbm_budget_ok: bool
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops_total \
+            if self.hlo_flops_total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def energy_j(self) -> float:
+        """Per-device energy per step from the TPU energy model -- the
+        paper's f2 objective lifted to the fleet (DESIGN.md section 2):
+        pJ/FLOP + pJ/HBM-byte + pJ/link-byte."""
+        return (self.compute_s * V5E_PEAK_FLOPS_BF16 * TPU_PJ_PER_FLOP
+                + self.memory_s * V5E_HBM_BW * TPU_PJ_PER_HBM_BYTE
+                + self.collective_s * 50e9 * TPU_PJ_PER_ICI_BYTE) * 1e-12
+
+
+def from_record(rec: dict) -> Roofline:
+    """rec: one dry-run JSON record (see launch/dryrun.py)."""
+    chips = rec["num_devices"]
+    flops_dev = rec["cost"].get("flops", 0.0)
+    bytes_dev = rec["cost"].get("bytes accessed", 0.0)
+    coll_dev = rec["collective_bytes"].get("total", 0.0)
+    mem = rec["memory"]
+    resident = mem.get("argument_size_in_bytes", 0) \
+        + mem.get("output_size_in_bytes", 0) \
+        + mem.get("temp_size_in_bytes", 0) \
+        - mem.get("alias_size_in_bytes", 0)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=flops_dev / V5E_PEAK_FLOPS_BF16,
+        memory_s=bytes_dev / V5E_HBM_BW,
+        collective_s=coll_dev / ICI_LINK_BW,
+        model_flops=rec["model_flops"] / chips,
+        hlo_flops_total=flops_dev,
+        bytes_per_device=resident,
+        hbm_budget_ok=resident <= 16 * 1024**3,
+    )
+
+
+def format_table(rows: list[Roofline]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'GB/dev':>8s} {'fits':>5s} "
+           f"{'J/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.mesh:9s} "
+            f"{r.compute_s:10.4f} {r.memory_s:10.4f} {r.collective_s:10.4f} "
+            f"{r.dominant:>10s} {r.useful_ratio:7.2f} "
+            f"{r.bytes_per_device / 2**30:8.2f} "
+            f"{'yes' if r.hbm_budget_ok else 'NO':>5s} "
+            f"{r.energy_j:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,31 @@
+"""SmartSplit core: cost models, NSGA-II, TOPSIS, the split planner and the
+paper's competing baselines."""
+from repro.core.baselines import ALGORITHMS, coc, cos, ebo, lbo, mbo, rs
+from repro.core.costs import (LayerProfile, ModelProfile, client_memory,
+                              energy_terms, evaluate_objectives,
+                              feasible_mask, latency_terms, total_energy,
+                              total_latency)
+from repro.core.hardware import (PAPER_ENV_J6, PAPER_ENV_NOTE8, PROFILES,
+                                 TPU_EDGE_CLOUD, TPU_TWO_POD, DeviceTier,
+                                 LinkProfile, TwoTierHardware, tpu_pod_tier)
+from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
+from repro.core.pareto import (crowding_distance, exhaustive_pareto,
+                               non_dominated_sort, pareto_front_mask)
+from repro.core.smartsplit import (SplitPlan, smartsplit,
+                                   smartsplit_exhaustive)
+from repro.core.topsis import column_normalise, topsis_select
+
+__all__ = [
+    "ALGORITHMS", "coc", "cos", "ebo", "lbo", "mbo", "rs",
+    "LayerProfile", "ModelProfile", "client_memory", "energy_terms",
+    "evaluate_objectives", "feasible_mask", "latency_terms", "total_energy",
+    "total_latency",
+    "PAPER_ENV_J6", "PAPER_ENV_NOTE8", "PROFILES", "TPU_EDGE_CLOUD",
+    "TPU_TWO_POD", "DeviceTier", "LinkProfile", "TwoTierHardware",
+    "tpu_pod_tier",
+    "NSGA2Config", "NSGA2Result", "nsga2",
+    "crowding_distance", "exhaustive_pareto", "non_dominated_sort",
+    "pareto_front_mask",
+    "SplitPlan", "smartsplit", "smartsplit_exhaustive",
+    "column_normalise", "topsis_select",
+]

@@ -1,0 +1,213 @@
+"""Latency / energy / memory cost models (paper Section III).
+
+The unit the optimiser reasons over is a ``LayerProfile``: one entry per
+splittable layer with its work (FLOPs), memory traffic, resident memory, and
+the size of the activation that would cross the client->server boundary if
+the model were split *after* this layer.  Profiles are produced analytically
+by ``models/profiles.py`` (for both the paper's CNNs and the assigned
+transformer architectures) and cross-checked against compiled-HLO
+``cost_analysis`` in tests.
+
+Cost model semantics (paper Eq. 2-13):
+
+  T_client  = M_client|l1 / (C_client * S_client)               (Eq. 2)
+  T_server  = M_server|l2 / (C_server * S_server)               (Eq. 3)
+  T_upload  = I|l1 / B                                          (Eq. 4)
+  E_client  = (k * C * nu^3) * T_client                         (Eq. 7)
+  E_upload  = (alpha_u * tau_u + beta_u) * T_upload             (Eq. 9)
+  E_download= (alpha_d * tau_d + beta_d) * (d / B)              (Eq. 12)
+
+For roofline (TPU) tiers the compute time per side is
+``max(flops/peak, bytes/hbm_bw)`` summed over that side's layers, and the
+energy is per-op accounting (pJ/FLOP + pJ/byte + pJ/link-byte); everything
+else is identical in form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.hardware import DeviceTier, TwoTierHardware
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """Per-layer costs, all in base units (FLOPs, bytes)."""
+
+    name: str
+    kind: str                   # conv / fc / pool / act / norm / attn / moe ...
+    flops: float                # useful FLOPs for one inference of this layer
+    param_bytes: float          # resident weight bytes
+    act_bytes: float            # output activation bytes (workspace)
+    boundary_bytes: float       # bytes crossing the link if split AFTER this
+    # Extra payload that must accompany a split after this layer (e.g. SSM /
+    # WKV recurrent state for the remaining layers, paper-CNN: 0).
+    state_bytes: float = 0.0
+
+    @property
+    def mem_bytes(self) -> float:
+        """Paper's M|layer: memory utilised running this layer (weights +
+        output tensor) -- the learnopencv counting the paper cites."""
+        return self.param_bytes + self.act_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """A splittable model: ordered layers + input size."""
+
+    name: str
+    layers: tuple[LayerProfile, ...]
+    input_bytes: float          # payload if split at l1 = 0 (COC)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    # -- cumulative views (vectorised; the GA evaluates whole populations) --
+    def cum_mem(self) -> np.ndarray:
+        """cum_mem[i] = M|l1 for l1 = i  (memory of first i layers)."""
+        m = np.array([l.mem_bytes for l in self.layers])
+        return np.concatenate([[0.0], np.cumsum(m)])
+
+    def cum_flops(self) -> np.ndarray:
+        f = np.array([l.flops for l in self.layers])
+        return np.concatenate([[0.0], np.cumsum(f)])
+
+    def cum_param_bytes(self) -> np.ndarray:
+        p = np.array([l.param_bytes for l in self.layers])
+        return np.concatenate([[0.0], np.cumsum(p)])
+
+    def boundary(self) -> np.ndarray:
+        """boundary[i] = I|l1 for split index l1 = i (i layers on client).
+
+        boundary[0] = input_bytes (everything on the server);
+        boundary[L] = 0 (nothing crosses -- COS)."""
+        b = [self.input_bytes]
+        for l in self.layers:
+            b.append(l.boundary_bytes + l.state_bytes)
+        b[-1] = 0.0
+        return np.array(b)
+
+
+# ---------------------------------------------------------------------------
+# Latency model
+# ---------------------------------------------------------------------------
+def _tier_compute_time(tier: DeviceTier, mem_bytes, flops, hbm_bytes):
+    """Compute time on one tier for (vectorised) cumulative work.
+
+    Paper tiers: Eq. 2/3 -- memory-as-work over cores*speed.
+    Roofline tiers: max(flops/peak, bytes/bw).
+    """
+    if tier.is_roofline:
+        return np.maximum(flops / tier.peak_flops, hbm_bytes / tier.hbm_bw)
+    return mem_bytes / tier.compute_scale
+
+
+def latency_terms(profile: ModelProfile, hw: TwoTierHardware):
+    """Return (T_client, T_upload, T_server, T_download) arrays indexed by
+    split index l1 = 0..L (l1 layers on the client)."""
+    cm = profile.cum_mem()
+    cf = profile.cum_flops()
+    # HBM traffic proxy: weights + activations each touched once.
+    ch = cm
+    t_client = _tier_compute_time(hw.client, cm, cf, ch)
+    t_server = _tier_compute_time(hw.server, cm[-1] - cm, cf[-1] - cf,
+                                  ch[-1] - ch)
+    t_upload = profile.boundary() / hw.link.bandwidth
+    t_download = np.full_like(t_upload, hw.download_bytes / hw.link.bandwidth)
+    # COS (l1 = L): no server interaction at all.
+    t_download[-1] = 0.0
+    # COC (l1 = 0): client does nothing.
+    return t_client, t_upload, t_server, t_download
+
+
+def total_latency(profile: ModelProfile, hw: TwoTierHardware) -> np.ndarray:
+    """Paper Eq. 5 (download latency measured negligible, excluded)."""
+    t_c, t_u, t_s, _ = latency_terms(profile, hw)
+    return t_c + t_u + t_s
+
+
+# ---------------------------------------------------------------------------
+# Energy model (client-side energy only, per the paper)
+# ---------------------------------------------------------------------------
+def energy_terms(profile: ModelProfile, hw: TwoTierHardware):
+    """Return (E_client, E_upload, E_download) arrays indexed by l1."""
+    t_c, t_u, _, t_d = latency_terms(profile, hw)
+    cf = profile.cum_flops()
+    cm = profile.cum_mem()
+    if hw.client.is_roofline:
+        e_client = (cf * hw.client.pj_per_flop
+                    + cm * hw.client.pj_per_hbm_byte) * 1e-12
+        e_link_up = profile.boundary() * hw.link.pj_per_byte * 1e-12
+        e_link_down = np.full_like(e_link_up,
+                                   hw.download_bytes * hw.link.pj_per_byte
+                                   * 1e-12)
+        e_link_down[-1] = 0.0
+        return e_client, e_link_up, e_link_down
+    # Paper model: throughput tau == link bandwidth while transferring
+    # (constraint tau <= B holds with equality under saturation).
+    p_client = hw.client.compute_power_w()
+    p_up = hw.link.upload_power_w(hw.link.bandwidth)
+    p_down = hw.link.download_power_w(hw.link.bandwidth)
+    return p_client * t_c, p_up * t_u, p_down * t_d
+
+
+def total_energy(profile: ModelProfile, hw: TwoTierHardware) -> np.ndarray:
+    """Paper Eq. 13."""
+    e_c, e_u, e_d = energy_terms(profile, hw)
+    return e_c + e_u + e_d
+
+
+def client_memory(profile: ModelProfile, mode: str = "full") -> np.ndarray:
+    """Paper Eq. 16: f3 = M_client | l1.
+
+    mode='full': weights + activations (literal reading of M).
+    mode='activations': activation footprint only -- the *table-calibrated*
+    variant: reconstructing Table I from the paper's equations leaves the
+    composition of M|l1 in f3 under-specified, and the activations-only
+    reading reproduces the paper's published splits for AlexNet/VGG13/VGG16
+    exactly (see EXPERIMENTS.md 'Calibration')."""
+    if mode == "full":
+        return profile.cum_mem()
+    if mode == "activations":
+        a = np.array([l.act_bytes for l in profile.layers])
+        return np.concatenate([[0.0], np.cumsum(a)])
+    raise ValueError(mode)
+
+
+def evaluate_objectives(profile: ModelProfile, hw: TwoTierHardware,
+                        f3_mode: str = "full") -> np.ndarray:
+    """(L+1, 3) matrix of (f1 latency, f2 energy, f3 memory) per split l1."""
+    return np.stack([total_latency(profile, hw),
+                     total_energy(profile, hw),
+                     client_memory(profile, f3_mode)], axis=1)
+
+
+def feasible_mask(profile: ModelProfile, hw: TwoTierHardware,
+                  allow_degenerate: bool = False) -> np.ndarray:
+    """Constraints of Eq. 17 over split index l1 = 0..L.
+
+    * M_client|l1 <= memory budget,
+    * 1 <= l1 <= L-1 and l2 = L - l1 >= 1 (unless ``allow_degenerate`` for
+      the COS/COC baselines),
+    * tau <= B holds by construction (we model saturation at B).
+    """
+    L = profile.num_layers
+    mem_ok = profile.cum_mem() <= hw.client.memory_budget
+    idx = np.arange(L + 1)
+    if allow_degenerate:
+        rng_ok = np.ones(L + 1, bool)
+    else:
+        rng_ok = (idx >= 1) & (idx <= L - 1)
+    return mem_ok & rng_ok
+
+
+def check_profile(profile: ModelProfile) -> None:
+    """Sanity-check invariants every profile must satisfy."""
+    assert profile.num_layers >= 2, profile.name
+    for l in profile.layers:
+        assert l.flops >= 0 and l.param_bytes >= 0 and l.act_bytes >= 0, l
+        assert l.boundary_bytes >= 0 and l.state_bytes >= 0, l
+    assert profile.input_bytes > 0

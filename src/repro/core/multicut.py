@@ -1,0 +1,123 @@
+"""Beyond-paper: K-cut SmartSplit over a CHAIN of tiers.
+
+The paper splits once between two tiers.  Real fleets have more stages
+(edge accelerator -> edge pod -> regional pod -> core pod); the natural
+generalisation is a genome of K-1 ordered cut points over a chain of K
+tiers -- exactly the multi-gene integer case the NSGA-II implementation
+was built for, where exhaustive enumeration is C(L-1, K-1) and stops being
+free (K=4, L=80: ~80k points; K=6: ~24M).
+
+Objectives (same structure as the paper's F):
+  f1 latency = sum_k stage_compute_k + sum_k boundary_k / link_bw_k
+  f2 energy  = per-tier compute energy + per-link transfer energy
+  f3 memory  = max over tiers of tier-memory / tier-budget (normalised
+               peak pressure -- the multi-tier analogue of M_client)
+Constraints: each stage non-empty; every tier within its memory budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costs import ModelProfile
+from repro.core.hardware import DeviceTier, LinkProfile
+from repro.core.nsga2 import NSGA2Config, nsga2
+from repro.core.topsis import topsis_select
+
+_PENALTY = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainHardware:
+    """K tiers connected by K-1 links."""
+
+    tiers: tuple[DeviceTier, ...]
+    links: tuple[LinkProfile, ...]
+
+    def __post_init__(self):
+        assert len(self.links) == len(self.tiers) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiCutPlan:
+    cuts: tuple[int, ...]            # ordered cut indices, len K-1
+    objectives: tuple[float, float, float]
+    pareto_cuts: np.ndarray
+    pareto_F: np.ndarray
+
+    def stages(self, L: int) -> list[tuple[int, int]]:
+        edges = (0,) + self.cuts + (L,)
+        return [(edges[i], edges[i + 1]) for i in range(len(edges) - 1)]
+
+
+def _stage_tables(profile: ModelProfile, hw: ChainHardware):
+    """Cumulative per-layer tables used by the vectorised evaluator."""
+    flops = np.concatenate([[0.0], np.cumsum(
+        [l.flops for l in profile.layers])])
+    mem = profile.cum_mem()
+    bound = profile.boundary()
+    return flops, mem, bound
+
+
+def evaluate_multicut(profile: ModelProfile, hw: ChainHardware,
+                      genomes: np.ndarray) -> np.ndarray:
+    """genomes: (n, K-1) cut points (unsorted ok; sorted internally).
+    Returns (n, 3) objectives with constraint penalties applied."""
+    L = profile.num_layers
+    K = len(hw.tiers)
+    flops, mem, bound = _stage_tables(profile, hw)
+    cuts = np.sort(np.asarray(genomes, np.int64), axis=1)
+    n = cuts.shape[0]
+    edges = np.concatenate([np.zeros((n, 1), np.int64), cuts,
+                            np.full((n, 1), L, np.int64)], axis=1)
+    lat = np.zeros(n)
+    en = np.zeros(n)
+    peak = np.zeros(n)
+    for k, tier in enumerate(hw.tiers):
+        f_k = flops[edges[:, k + 1]] - flops[edges[:, k]]
+        m_k = mem[edges[:, k + 1]] - mem[edges[:, k]]
+        if tier.is_roofline:
+            t_k = np.maximum(f_k / tier.peak_flops, m_k / tier.hbm_bw)
+            e_k = (f_k * tier.pj_per_flop
+                   + m_k * tier.pj_per_hbm_byte) * 1e-12
+        else:
+            t_k = m_k / tier.compute_scale
+            e_k = tier.compute_power_w() * t_k
+        lat += t_k
+        en += e_k
+        peak = np.maximum(peak, m_k / tier.memory_budget)
+    for k, link in enumerate(hw.links):
+        b_k = bound[edges[:, k + 1]]
+        t_l = b_k / link.bandwidth
+        lat += t_l
+        if link.pj_per_byte:
+            en += b_k * link.pj_per_byte * 1e-12
+        else:
+            en += link.upload_power_w(link.bandwidth) * t_l
+    F = np.stack([lat, en, peak], axis=1)
+    # constraints: non-empty stages, memory budgets
+    widths = np.diff(edges, axis=1)
+    bad = (widths < 1).any(axis=1) | (peak > 1.0)
+    F[bad] += _PENALTY
+    return F
+
+
+def smartsplit_multicut(profile: ModelProfile, hw: ChainHardware,
+                        config: NSGA2Config | None = None) -> MultiCutPlan:
+    """Algorithm 1 with the K-cut genome."""
+    L = profile.num_layers
+    K = len(hw.tiers)
+    config = config or NSGA2Config(pop_size=128, generations=80, seed=0)
+    lower = np.ones(K - 1, np.int64)
+    upper = np.full(K - 1, L - 1, np.int64)
+    res = nsga2(lambda g: evaluate_multicut(profile, hw, g),
+                lower, upper, config)
+    F = evaluate_multicut(profile, hw, res.pareto_genomes)
+    feas = F[:, 0] < _PENALTY / 2
+    pick = topsis_select(F, feasible=feas)
+    cuts = tuple(int(c) for c in np.sort(res.pareto_genomes[pick]))
+    return MultiCutPlan(cuts=cuts,
+                        objectives=tuple(float(v) for v in F[pick]),
+                        pareto_cuts=np.sort(res.pareto_genomes, axis=1),
+                        pareto_F=F)

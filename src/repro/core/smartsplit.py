@@ -1,0 +1,108 @@
+"""SmartSplit (paper Algorithm 1): NSGA-II Pareto set -> TOPSIS pick.
+
+Also provides the exhaustive solver (the split index is one integer, so the
+true Pareto front is enumerable -- the paper uses a GA because its framing
+is generic; we keep both and test that NSGA-II recovers the exhaustive
+front, then use the GA for the multi-cut beyond-paper genome where
+enumeration explodes)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costs import (ModelProfile, evaluate_objectives,
+                              feasible_mask)
+from repro.core.hardware import TwoTierHardware
+from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
+from repro.core.pareto import exhaustive_pareto
+from repro.core.topsis import topsis_select
+
+_PENALTY = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """The optimiser's output: l1 layers on the client, rest on the server."""
+
+    model: str
+    split_index: int                 # l1
+    num_layers: int                  # L
+    objectives: tuple[float, float, float]   # (latency s, energy J, mem bytes)
+    pareto_indices: tuple[int, ...]  # Pareto-set split indices (for plots)
+    pareto_F: np.ndarray             # their objective values
+    hardware: str
+
+    @property
+    def client_layers(self) -> int:
+        return self.split_index
+
+    @property
+    def server_layers(self) -> int:
+        return self.num_layers - self.split_index
+
+
+def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
+               config: NSGA2Config = NSGA2Config(),
+               weights: np.ndarray | None = None,
+               use_anti_ideal: bool = False,
+               f3_mode: str = "full") -> SplitPlan:
+    """Paper Algorithm 1.
+
+    Line 1:   O <- NSGA2(F)          (Pareto set of split indices)
+    Lines 2-7: TOPSIS over the Pareto set with constraint filtering.
+    """
+    F_all = evaluate_objectives(profile, hw, f3_mode)   # (L+1, 3)
+    feas_all = feasible_mask(profile, hw)
+    L = profile.num_layers
+
+    def evaluate(genomes: np.ndarray) -> np.ndarray:
+        l1 = genomes[:, 0]
+        F = F_all[l1].copy()
+        # Penalise constraint violations so the GA steers feasible; TOPSIS
+        # re-applies the filter exactly (Algorithm 1's F'' reduction).
+        F[~feas_all[l1]] += _PENALTY
+        return F
+
+    # With stratified init, pop_size >= |domain| makes the archive front
+    # provably exact for the paper's single-gene genome (the GA's search
+    # matters for the beyond-paper multi-cut genomes).
+    if config.pop_size < L - 1:
+        config = dataclasses.replace(config, pop_size=L - 1)
+    result: NSGA2Result = nsga2(evaluate, lower=np.array([1]),
+                                upper=np.array([L - 1]), config=config)
+    pareto_l1 = result.pareto_genomes[:, 0]
+    pareto_F = F_all[pareto_l1]
+    feas = feasible_mask(profile, hw)[pareto_l1]
+    pick = topsis_select(pareto_F, feasible=feas, weights=weights,
+                         use_anti_ideal=use_anti_ideal)
+    l1 = int(pareto_l1[pick])
+    return SplitPlan(model=profile.name, split_index=l1, num_layers=L,
+                     objectives=tuple(float(x) for x in F_all[l1]),
+                     pareto_indices=tuple(int(x) for x in pareto_l1),
+                     pareto_F=pareto_F, hardware=hw.client.name)
+
+
+def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
+                          weights: np.ndarray | None = None,
+                          use_anti_ideal: bool = False,
+                          f3_mode: str = "full") -> SplitPlan:
+    """Ground-truth Algorithm 1 with the GA replaced by enumeration."""
+    F_all = evaluate_objectives(profile, hw, f3_mode)
+    feas = feasible_mask(profile, hw)
+    L = profile.num_layers
+    candidates = np.arange(1, L)                        # 1 <= l1 <= L-1
+    Fc = F_all[candidates]
+    # True Pareto front among feasible candidates.
+    feas_c = feas[candidates]
+    Fp = Fc.copy()
+    Fp[~feas_c] += _PENALTY
+    front = exhaustive_pareto(Fp)
+    pareto_l1 = candidates[front]
+    pick = topsis_select(F_all[pareto_l1], feasible=feas[pareto_l1],
+                         weights=weights, use_anti_ideal=use_anti_ideal)
+    l1 = int(pareto_l1[pick])
+    return SplitPlan(model=profile.name, split_index=l1, num_layers=L,
+                     objectives=tuple(float(x) for x in F_all[l1]),
+                     pareto_indices=tuple(int(x) for x in pareto_l1),
+                     pareto_F=F_all[pareto_l1], hardware=hw.client.name)

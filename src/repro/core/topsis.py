@@ -1,0 +1,54 @@
+"""TOPSIS decision analysis (paper Section V-B, Algorithm 1 lines 2-7).
+
+Paper variant: column-normalise the decision matrix, drop constraint
+violators (the reduced matrix F''), take the per-objective minimum as the
+ideal point, and pick the solution with the minimum Euclidean distance to
+it.  The classical TOPSIS closeness coefficient (distance to anti-ideal /
+(d+ + d-)) is provided as an option; the paper uses ideal-distance only and
+that is the default everywhere."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def column_normalise(F: np.ndarray) -> np.ndarray:
+    """Vector (L2) column normalisation -- standard TOPSIS step 1."""
+    F = np.asarray(F, float)
+    norms = np.linalg.norm(F, axis=0)
+    norms = np.where(norms == 0, 1.0, norms)
+    return F / norms
+
+
+def topsis_select(F: np.ndarray,
+                  feasible: np.ndarray | None = None,
+                  weights: np.ndarray | None = None,
+                  use_anti_ideal: bool = False) -> int:
+    """Return the index (into F's rows) of the TOPSIS-chosen solution.
+
+    F: (n, m) objective matrix, all objectives minimised.
+    feasible: optional boolean mask; infeasible rows are removed before the
+      ideal point is computed (the paper's F' -> F'' reduction).
+    weights: optional per-objective weights applied after normalisation.
+    """
+    F = np.asarray(F, float)
+    n = F.shape[0]
+    if feasible is None:
+        feasible = np.ones(n, bool)
+    idx = np.where(feasible)[0]
+    if idx.size == 0:
+        raise ValueError("TOPSIS: no feasible solutions")
+    Fn = column_normalise(F)[idx]
+    if weights is not None:
+        Fn = Fn * np.asarray(weights, float)
+    ideal = Fn.min(axis=0)
+    d_plus = np.sqrt(((Fn - ideal) ** 2).sum(axis=1))
+    if use_anti_ideal:
+        anti = Fn.max(axis=0)
+        d_minus = np.sqrt(((Fn - anti) ** 2).sum(axis=1))
+        denom = d_plus + d_minus
+        denom = np.where(denom == 0, 1.0, denom)
+        closeness = d_minus / denom
+        best = int(np.argmax(closeness))
+    else:
+        best = int(np.argmin(d_plus))
+    return int(idx[best])

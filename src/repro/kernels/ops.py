@@ -1,0 +1,84 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, GQA head broadcasting, and the
+CPU-vs-TPU switch: ``interpret=True`` (the default here) executes the
+kernel bodies in Python on CPU for validation; on a real TPU runtime pass
+``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d as _conv
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba2_ssd as _ssd
+from repro.kernels import rwkv6_wkv as _wkv
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention_gqa(q, k, v, *, causal: bool = True,
+                        block_q: int = 128, block_k: int = 128):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    kb = jnp.repeat(k, g, axis=2)
+    vb = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = kb.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = vb.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    # sequence lengths must be block multiples (padding keys would need an
+    # extra mask; callers pick block sizes that divide their seq lens)
+    assert Sq % block_q == 0 and kf.shape[1] % block_k == 0, \
+        (Sq, kf.shape[1], block_q, block_k)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal,
+                              block_q=block_q, block_k=block_k,
+                              interpret=INTERPRET)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def conv2d(x, w, *, stride: int = 1, pad: int = 0):
+    return _conv.conv2d(x, w, stride=stride, pad=pad, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def rwkv6_wkv(r, k, v, w, u, *, block_t: int = 64):
+    r2, p = _pad_to(r, 1, block_t)
+    k2, _ = _pad_to(k, 1, block_t)
+    v2, _ = _pad_to(v, 1, block_t)
+    w2, _ = _pad_to(w, 1, block_t)
+    if p:
+        # pad decay with ones (identity) so state evolution is unaffected
+        w2 = w2.at[:, -p:].set(1.0)
+    out = _wkv.rwkv6_wkv(r2, k2, v2, w2, u, block_t=block_t,
+                         interpret=INTERPRET)
+    return out[:, :r.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2_ssd(x, dt, A, B, C, *, chunk: int = 64):
+    T = x.shape[1]
+    (x2, p) = _pad_to(x, 1, chunk)
+    dt2, _ = _pad_to(dt, 1, chunk)
+    B2, _ = _pad_to(B, 1, chunk)
+    C2, _ = _pad_to(C, 1, chunk)
+    out = _ssd.mamba2_ssd(x2, dt2, A, B2, C2, chunk=chunk,
+                          interpret=INTERPRET)
+    return out[:, :T]

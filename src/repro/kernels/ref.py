@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: slow, obviously-correct implementations
+(token-level scans, direct convolution, dense softmax attention) that the
+kernel sweep tests assert_allclose against."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (BH, Sq, hd); k, v: (BH, Sk, hd). Dense softmax attention, f32."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / hd**0.5
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        # align the ends: query i attends to keys <= i + (Sk - Sq)
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0):
+    """x: (N, Cin, H, W); w: (Cout, Cin, K, K). Direct lax conv."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def rwkv6_wkv_ref(r, k, v, w, u, s0=None):
+    """Token-level RWKV6 WKV recurrence.
+
+    r,k,v,w: (B, T, H, hd); w is the per-step decay in (0,1);
+    u: (H, hd) current-token bonus. Returns (out (B,T,H,hd), s_fin)."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, ins):
+        rt, kt, vt, wt = ins
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = s * wt[..., :, None] + kv
+        return s_new, out
+
+    ins = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                for t in (r, k, v, w))
+    s_fin, outs = jax.lax.scan(step, s0, ins)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), s_fin
+
+
+def mamba2_ssd_ref(x, dt, A, B, C, D=None, h0=None):
+    """Token-level Mamba2 SSD recurrence.
+
+    x: (Bb, T, H, hp); dt: (Bb, T, H) (post-softplus); A: (H,) negative;
+    B, C: (Bb, T, H, ds). h_t = exp(dt*A) h_{t-1} + dt * B_t x_t^T;
+    y_t = C_t . h_t (+ D x).  Returns (y, h_fin)."""
+    Bb, T, H, hp = x.shape
+    ds = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, hp, ds), jnp.float32)
+
+    def step(h, ins):
+        xt, dtt, Bt, Ct = ins
+        a = jnp.exp(dtt * A[None, :])                       # (Bb,H)
+        h_new = h * a[..., None, None] \
+            + jnp.einsum("bh,bhp,bhn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, h_new)
+        return h_new, y
+
+    ins = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+           dt.transpose(1, 0, 2).astype(jnp.float32),
+           B.transpose(1, 0, 2, 3).astype(jnp.float32),
+           C.transpose(1, 0, 2, 3).astype(jnp.float32))
+    h_fin, ys = jax.lax.scan(step, h0, ins)
+    y = ys.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h_fin

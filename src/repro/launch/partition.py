@@ -1,0 +1,368 @@
+"""Sharding rules and jit-ready step functions.
+
+Baseline sharding policy (guaranteed to lower for every assigned arch x
+shape; section-Perf iterates on the chosen three):
+
+* parameters -- explicit rules for embed/unembed/attention/MLP/MoE weights
+  (tensor parallel over ``model``; expert parallel when E % model == 0),
+  generic best-effort for everything else: shard the last dimension
+  divisible by the model-axis size, replicate otherwise.
+* batch / caches / optimiser state -- batch dims over (pod, data) when
+  divisible; a best-effort model-axis dim for large cache tensors.
+
+No shard_map here: the baseline relies on GSPMD propagation from these
+anchors.  The SmartSplit two-stage executor (the paper's technique) lives
+in ``launch/smartsplit_exec.py``."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import data_axes
+from repro.models import transformer as T
+from repro.training import optimizer as opt
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def best_effort_spec(shape: tuple, mesh, *, skip_dims: tuple = (),
+                     batch_dim: int | None = None) -> P:
+    """Shard batch_dim over (pod,data) if divisible; then the last other
+    dim divisible by the model axis."""
+    model = _axis_size(mesh, "model")
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    spec: list = [None] * len(shape)
+    if batch_dim is not None and dsize > 1 \
+            and shape[batch_dim] % dsize == 0:
+        spec[batch_dim] = daxes if len(daxes) > 1 else daxes[0]
+    if model > 1:
+        for i in range(len(shape) - 1, -1, -1):
+            if i in skip_dims or i == batch_dim or spec[i] is not None:
+                continue
+            if shape[i] % model == 0 and shape[i] >= model:
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
+FSDP_MIN_ELEMENTS = 1 << 22      # only bother sharding big leaves
+
+
+def _maybe_fsdp(spec: P, shape: tuple, mesh, cfg=None) -> P:
+    """§Perf P1 iter-2: additionally shard the largest still-replicated dim
+    of big parameters over the data axes (FSDP/ZeRO-1 -- the optimiser
+    moments mirror parameter shardings, so they shard too).  Enabled by
+    default; REPRO_FSDP=0 restores the baseline.
+
+    Applies only to non-recurrent patterns: inside the doubly-nested
+    recurrent scans (mamba/zamba/rwkv) GSPMD cannot hoist the per-layer
+    weight all-gathers and falls back to involuntary rematerialisation
+    (measured: zamba train collective 1.6e12 -> 8.8e12 B, temp 461 GB)."""
+    import os
+    if os.environ.get("REPRO_FSDP", "1") != "1":
+        return spec
+    if cfg is not None and cfg.pattern in ("mamba", "rwkv"):
+        return spec
+    import numpy as _np
+    if _np.prod(shape) < FSDP_MIN_ELEMENTS:
+        return spec
+    daxes = data_axes(mesh)
+    if not daxes:
+        return spec
+    dsize = int(_np.prod([mesh.shape[a] for a in daxes]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if used & set(daxes):
+        return spec          # a data axis is already in use on this leaf
+    cands = [i for i, e in enumerate(entries)
+             if e is None and shape[i] % dsize == 0 and shape[i] >= dsize]
+    if not cands:
+        return spec
+    tgt = max(cands, key=lambda i: shape[i])
+    entries[tgt] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*entries)
+
+
+def _param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    """Explicit TP rules keyed on parameter name, generic fallback."""
+    model = _axis_size(mesh, "model")
+    stacked = path.startswith(("blocks/", "tail_blocks/"))
+    lead = (0,) if stacked else ()
+    name = path.split("/")[-1]
+
+    def ok(dim_size):
+        return model > 1 and dim_size % model == 0 and dim_size >= model
+
+    nd = len(shape)
+    if name == "embed" and ok(shape[0]):
+        return P("model", *([None] * (nd - 1)))
+    if name == "unembed" and ok(shape[-1]):
+        return P(*([None] * (nd - 1)), "model")
+    if name in ("wq", "wk", "wv", "wg", "wu", "ck", "wr", "wv_", "in_proj") \
+            and nd >= 2 and ok(shape[-1]):
+        return P(*([None] * (nd - 1)), "model")          # column parallel
+    if name in ("wo", "wd", "cv", "out_proj") and nd >= 2 \
+            and ok(shape[-2]):
+        spec = [None] * nd
+        spec[-2] = "model"                               # row parallel
+        return P(*spec)
+    if path.split("/")[-2:][0] == "moe" or "/moe/" in path:
+        # expert-stacked weights (L, E, d, f) or (E, d, f)
+        e_dim = 1 if stacked else 0
+        if name in ("wg", "wu", "wd") and nd >= 3:
+            if ok(shape[e_dim]):
+                spec = [None] * nd
+                spec[e_dim] = "model"                    # expert parallel
+                return P(*spec)
+            # granite: E=40 not divisible -> shard within-expert dim
+            tgt = nd - 1 if name in ("wg", "wu") else nd - 2
+            if ok(shape[tgt]):
+                spec = [None] * nd
+                spec[tgt] = "model"
+                return P(*spec)
+    # Small per-layer vectors (norm scales, token-shift mus, biases):
+    # REPLICATE.  Sharding a (d,)-vector poisons every activation it
+    # multiplies into a d-sharded layout, and each downstream projection
+    # then all-gathers the full activation (section-Perf P3: 7 gathers of
+    # (B,S,d) per rwkv layer; same pathology in every arch's norms).
+    per_layer = int(np.prod(shape[1:] if stacked else shape))
+    if per_layer <= 1 << 20:
+        return P()
+    return best_effort_spec(shape, mesh, skip_dims=lead)
+
+
+def _tree_paths(tree) -> Any:
+    """Map each leaf to its 'a/b/c' key path string."""
+    paths = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, f"{prefix}/{k}" if prefix else k)
+        elif isinstance(node, (tuple, list)) and not hasattr(node, "shape"):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}/{i}")
+        else:
+            paths[prefix] = node
+    walk(tree, "")
+    return paths
+
+
+def param_struct(cfg: ModelConfig, mesh, dtype=jnp.bfloat16,
+                 mode: str = "train"):
+    """ShapeDtypeStructs (no allocation) for params with shardings.
+
+    FSDP data-axis sharding applies to training only (§Perf P1/P2):
+    inference wants weights resident (model-sharded), not re-gathered
+    every step."""
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+    def attach(path, leaf):
+        spec = _param_spec(path, leaf.shape, cfg, mesh)
+        # FSDP for PARAMETERS only pays off on MoE expert weights (their
+        # replicated-over-data payload dominates); for dense weights the
+        # in-loop re-gather regresses memory (qwen train 16 -> 174 GB/dev
+        # measured).  Optimiser moments are ZeRO-sharded for everyone in
+        # opt_state_struct (they live outside the layer loop).
+        if mode == "train" and "moe/" in path:
+            spec = _maybe_fsdp(spec, leaf.shape, mesh, cfg)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return _map_with_paths(shapes, attach)
+
+
+def _map_with_paths(tree, fn, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _map_with_paths(v, fn, f"{prefix}/{k}" if prefix else k)
+                for k, v in tree.items()}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):   # NamedTuple
+        return type(tree)(*[
+            _map_with_paths(v, fn, f"{prefix}/{f}")
+            for f, v in zip(tree._fields, tree)])
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(
+            _map_with_paths(v, fn, f"{prefix}/{i}")
+            for i, v in enumerate(tree))
+    if tree is None:
+        return None
+    return fn(prefix, tree)
+
+
+def opt_state_struct(params_struct, cfg=None):
+    """AdamW state structs: parameter shardings + ZeRO-1 data-axis
+    sharding of the f32 moments (they are touched only at the update,
+    outside the layer loop, so extra sharding is free of in-loop
+    collectives -- section-Perf P1/global)."""
+    def f32_like(leaf):
+        spec = leaf.sharding.spec
+        mesh = leaf.sharding.mesh
+        spec = _maybe_fsdp(spec, leaf.shape, mesh, None)
+        return jax.ShapeDtypeStruct(leaf.shape, jnp.float32,
+                                    sharding=NamedSharding(mesh, spec))
+    mu = jax.tree.map(f32_like, params_struct)
+    nu = jax.tree.map(f32_like, params_struct)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return opt.AdamWState(step=step, mu=mu, nu=nu)
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, mesh,
+                 dtype=jnp.bfloat16) -> dict:
+    """Input ShapeDtypeStructs for one (arch, input-shape) cell."""
+    B = shape.global_batch
+    S = shape.seq_len if shape.mode != "decode" else 1
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    bspec = (daxes if len(daxes) > 1 else daxes[0]) \
+        if dsize > 1 and B % dsize == 0 else None
+
+    def tok(s):
+        return jax.ShapeDtypeStruct(
+            (B, s), jnp.int32, sharding=NamedSharding(mesh, P(bspec, None)))
+
+    batch = {}
+    if shape.mode == "train":
+        if cfg.frontend == "audio":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, shape.seq_len, cfg.d_model), dtype,
+                sharding=NamedSharding(mesh, P(bspec, None, None)))
+            batch["labels"] = tok(shape.seq_len)
+        elif cfg.frontend == "vision":
+            n_patch = min(1024, shape.seq_len // 4)
+            n_text = shape.seq_len - n_patch
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_patch, cfg.d_model), dtype,
+                sharding=NamedSharding(mesh, P(bspec, None, None)))
+            batch["tokens"] = tok(n_text)
+            batch["labels"] = tok(n_text)
+        else:
+            batch["tokens"] = tok(shape.seq_len)
+            batch["labels"] = tok(shape.seq_len)
+    elif shape.mode == "prefill":
+        if cfg.frontend == "audio":
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, shape.seq_len, cfg.d_model), dtype,
+                sharding=NamedSharding(mesh, P(bspec, None, None)))
+        else:
+            batch["tokens"] = tok(shape.seq_len)
+    else:   # decode: ONE token
+        batch["tokens"] = tok(1)
+    return batch
+
+
+def cache_struct(cfg: ModelConfig, shape: InputShape, mesh,
+                 dtype=jnp.bfloat16):
+    """KV/SSM cache structs for decode shapes, best-effort sharded."""
+    shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+    model = _axis_size(mesh, "model")
+
+    def attach(path, leaf):
+        if leaf.ndim == 0:
+            return jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, P()))
+        name = path.split("/")[-1]
+        # KV caches (L, B, M, KV, hd): shard kv heads over `model` when
+        # divisible; otherwise REPLICATE over model (sharding M or hd
+        # forces an all-gather per layer in the attention contraction --
+        # §Perf P2 measured it at 2.15 GB x layers per step; redundant
+        # data-parallel decode attention is far cheaper).
+        if name in ("k", "v") and leaf.ndim == 5:
+            bspec = best_effort_spec((leaf.shape[1],), mesh,
+                                     batch_dim=0)[0]
+            if model > 1 and leaf.shape[3] % model == 0:
+                # kv heads divide the model axis: head-sharded cache
+                spec = P(None, bspec, None, "model", None)
+            elif model > 1 and leaf.shape[2] % model == 0:
+                # flash-decoding style: shard the sequence dim; softmax
+                # over the sharded axis costs only tiny stat reductions
+                spec = P(None, bspec, "model", None, None)
+            else:
+                spec = P(None, bspec, None, None, None)
+        elif name == "slot_pos":
+            spec = P(None, "model") if model > 1 \
+                and leaf.ndim == 2 and leaf.shape[1] % model == 0 else P()
+        elif name in ("x_tm", "x_cm"):
+            # token-shift states (L, B, d) are tiny; sharding d poisons
+            # every projection input via the shift-concat (section-Perf P3:
+            # 7 full-activation all-gathers per layer)
+            bspec = best_effort_spec((leaf.shape[1],), mesh,
+                                     batch_dim=0)[0]
+            spec = P(None, bspec, None)
+        elif name in ("wkv", "h") and leaf.ndim == 5:
+            # recurrent states (L, B, nh, hd, hd|ds): shard HEADS over
+            # `model` to match the head-sharded projections -- sharding a
+            # state feature dim forces per-layer gathers of the whole
+            # scan input stream (§Perf P3: 4.8 s of all-gather).
+            bspec = best_effort_spec((leaf.shape[1],), mesh,
+                                     batch_dim=0)[0]
+            nh_ok = model > 1 and leaf.shape[2] % model == 0
+            spec = P(None, bspec, "model" if nh_ok else None, None, None)
+        else:
+            # other states: dim0 = layer, dim1 = batch
+            bdim = 1 if leaf.ndim >= 2 else None
+            spec = best_effort_spec(leaf.shape, mesh, skip_dims=(0,),
+                                    batch_dim=bdim)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return _map_with_paths(shapes, attach)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig | None = None,
+                    unroll_layers: bool = False):
+    ocfg = ocfg or opt.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            l, metrics = T.loss_fn(cfg, p, batch, unroll_layers=unroll_layers)
+            return l, metrics
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        params, opt_state, om = opt.apply_updates(ocfg, params, grads,
+                                                  opt_state)
+        return params, opt_state, {"loss": l, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll_layers: bool = False):
+    def prefill_step(params, batch, cache):
+        logits, cache, _ = T.forward(cfg, params, batch, mode="prefill",
+                                     cache=cache, unroll_layers=unroll_layers)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+def make_encode_step(cfg: ModelConfig, unroll_layers: bool = False):
+    """Encoder-only archs: prefill == full forward, no cache."""
+    def encode_step(params, batch):
+        logits, _, _ = T.forward(cfg, params, batch, mode="prefill",
+                                 unroll_layers=unroll_layers)
+        return logits
+    return encode_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll_layers: bool = False):
+    def serve_step(params, tokens, cache):
+        return T.decode_step(cfg, params, tokens, cache,
+                             unroll_layers=unroll_layers)
+    return serve_step

@@ -1,0 +1,65 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Boots the bucketed batch engine on the reduced config, optionally planning
+the SmartSplit placement first (prints the chosen split and its predicted
+objective triple)."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import all_configs
+from repro.core import TPU_EDGE_CLOUD, smartsplit
+from repro.models import transformer as T
+from repro.models.profiles import transformer_profile
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b",
+                    choices=sorted(all_configs()))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--plan-split", action="store_true")
+    args = ap.parse_args()
+
+    cfg = all_configs()[args.arch].reduced()
+    cfg = dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, 512))
+    if cfg.is_encoder:
+        raise SystemExit(f"{args.arch} is encoder-only: no serving decode")
+
+    if args.plan_split:
+        prof = transformer_profile(cfg, seq_len=64, batch=args.max_batch,
+                                   mode="prefill")
+        plan = smartsplit(prof, TPU_EDGE_CLOUD)
+        lat, en, mem = plan.objectives
+        print(f"SmartSplit: l1={plan.split_index}/{cfg.num_layers} "
+              f"latency={lat:.2e}s energy={en:.2e}J "
+              f"edge-mem={mem / 2**20:.1f}MiB")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = Engine(cfg, params, max_len=128, max_batch=args.max_batch)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(args.requests):
+        plen = int(rng.choice([8, 16, 24]))
+        reqs.append(eng.submit(rng.integers(0, cfg.vocab_size,
+                                            plen).tolist(),
+                               max_new_tokens=args.max_new_tokens))
+    t0 = time.time()
+    eng.run_until_idle()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests / {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s, {int(eng.stats['batches'])} batches)")
+
+
+if __name__ == "__main__":
+    main()

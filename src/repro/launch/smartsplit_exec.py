@@ -1,0 +1,144 @@
+"""Two-stage SmartSplit executor: the paper's client->server handoff as an
+SPMD program over the ``pod`` mesh axis.
+
+Pod 0 ("client", paper: smartphone) owns transformer blocks [0, l1); pod 1
+("server", paper: cloud) owns [l1, L).  Both pods hold Lmax = max(l1, L-l1)
+padded block slots (inactive slots masked with jnp.where -- the same
+uniformity idiom as zamba2's padded segments), so ONE program serves any
+split index.  The boundary activation -- the paper's "intermediate model
+upload" -- crosses pods with ``jax.lax.ppermute`` over the inter-pod link;
+its byte count is exactly the I|l1 term the optimiser's Eq. 4 models.
+
+Phase structure (SPMD-uniform):
+  phase 1: every pod scans its local slots over the embedded input
+           (only pod 0's result is meaningful),
+  transfer: ppermute pod0 -> pod1,
+  phase 2: every pod scans its local slots again, pod 1 starting from the
+           received boundary activation (only pod 1's result is meaningful),
+  return:  pod 1's logits are ppermuted back so every pod holds the output.
+
+Wall-clock is ~2 x Lmax x t_layer -- the inherent cost of a sequential
+2-stage split without microbatching; ``pipelined=True`` adds GPipe-style
+microbatch pipelining over the same weights (the beyond-paper §Perf item),
+bringing steady-state utilisation of both pods to ~m/(m+1)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def stage_params(cfg: ModelConfig, params, l1: int):
+    """Reorganise stacked blocks (L, ...) into (2, Lmax, ...) stage slots +
+    (2, Lmax) active mask.  Works for the uniform-pattern archs."""
+    Lt = cfg.num_layers
+    lmax = max(l1, Lt - l1)
+
+    def pack(t):
+        pad = jnp.zeros((2, lmax) + t.shape[1:], t.dtype)
+        pad = pad.at[0, :l1].set(t[:l1])
+        pad = pad.at[1, :Lt - l1].set(t[l1:])
+        return pad
+
+    staged = jax.tree.map(pack, params["blocks"])
+    mask = np.zeros((2, lmax), bool)
+    mask[0, :l1] = True
+    mask[1, :Lt - l1] = True
+    return staged, jnp.asarray(mask)
+
+
+def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
+                            pipelined: bool = False, microbatches: int = 4):
+    """Returns fn(staged_blocks, mask, embed, unembed, final_norm, tokens)
+    -> logits, to be called with staged blocks sharded P('pod') on dim 0.
+
+    Restricted to the uniform-pattern architectures (attn/MoE/RWKV/Mamba
+    without shared blocks); zamba2 splits at segment granularity via the
+    same machinery applied to segments (see DESIGN.md §4)."""
+    kind = cfg.pattern
+    assert not (kind == "mamba" and cfg.attn_every), \
+        "zamba2: split at segment granularity"
+
+    def run_stage(blocks, mask, h, positions):
+        def body(carry, inp):
+            hh = carry
+            p_i, m = inp
+            out, _, _ = T._apply_block(cfg, kind, p_i, hh,
+                                       positions=positions)
+            return jnp.where(m, out, hh), None
+        h, _ = jax.lax.scan(body, h, (blocks, mask))
+        return h
+
+    def shard_fn(blocks, mask, embed, unembed, final_norm, tokens):
+        # inside shard_map: blocks leaves (1, Lmax, ...), mask (1, Lmax)
+        blocks = jax.tree.map(lambda t: t[0], blocks)
+        mask = mask[0]
+        B, S = tokens.shape
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :] \
+            + jnp.zeros((B, 1), jnp.int32)
+        h0 = embed[tokens]
+
+        if not pipelined:
+            h1 = run_stage(blocks, mask, h0, positions)          # phase 1
+            recv = jax.lax.ppermute(h1, "pod", [(0, 1)])         # upload
+            pod = jax.lax.axis_index("pod")
+            h2_in = jnp.where(pod == 1, recv, h1)
+            h2 = run_stage(blocks, mask, h2_in, positions)       # phase 2
+        else:
+            # GPipe-style: m microbatches, 2-stage pipeline.
+            m = microbatches
+            assert B % m == 0
+            mb = h0.reshape(m, B // m, S, -1)
+            pos_mb = positions[:B // m]
+            pod = jax.lax.axis_index("pod")
+
+            def tick(carry, xs):
+                inflight = carry          # activation each pod works on
+                mb_in = xs                # next microbatch (for pod 0)
+                my_in = jnp.where(pod == 0, mb_in, inflight)
+                out = run_stage(blocks, mask, my_in, pos_mb)
+                sent = jax.lax.ppermute(out, "pod", [(0, 1)])
+                return sent, out          # pod1's out = finished microbatch
+
+            pad = jnp.zeros_like(mb[0])
+            feed = jnp.concatenate([mb, pad[None]], axis=0)      # m+1 ticks
+            _, outs = jax.lax.scan(tick, pad, feed)
+            h2 = outs[1:].reshape(B, S, -1)  # pod1 finished mb i at tick i+1
+
+        h2 = L.rmsnorm(h2, final_norm, cfg.norm_eps)
+        logits = (h2 @ unembed).astype(jnp.float32)
+        # give every pod the stage-1 result
+        back = jax.lax.ppermute(logits, "pod", [(1, 0)])
+        pod = jax.lax.axis_index("pod")
+        return jnp.where(pod == 0, back, logits)
+
+    pod_spec = jax.tree.map(lambda _: P("pod"), {"x": 0})["x"]
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P("pod"), P("pod"), P(), P(), P(), P()),
+        out_specs=P(),
+        check_vma=False)
+    return fn
+
+
+def two_stage_apply(cfg: ModelConfig, params, tokens, mesh, l1: int,
+                    pipelined: bool = False, microbatches: int = 4):
+    """Convenience wrapper: stage, place, and run. Returns logits identical
+    (up to float assoc) to the monolithic ``forward``."""
+    staged, mask = stage_params(cfg, params, l1)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    fn = build_two_stage_forward(cfg, mesh, l1, pipelined, microbatches)
+    staged = jax.device_put(
+        staged, jax.tree.map(lambda _: NamedSharding(mesh, P("pod")),
+                             staged))
+    mask_p = jax.device_put(mask, NamedSharding(mesh, P("pod")))
+    return fn(staged, mask_p, params["embed"], unembed,
+              params["final_norm"], tokens)

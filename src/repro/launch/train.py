@@ -1,0 +1,39 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it drives the REDUCED config (full configs are
+exercised via the dry-run); on a real TPU fleet the same entrypoint runs
+the full config under the production mesh with the partition rules from
+``launch/partition.py``."""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import all_configs
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(all_configs()))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (not reduced) config -- TPU fleets")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = all_configs()[args.arch]
+    if not args.full:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, 512))
+    tcfg = TrainConfig(steps=args.steps, batch=args.batch,
+                       seq_len=args.seq_len, ckpt_dir=args.ckpt_dir)
+    out = train(cfg, tcfg)
+    print(f"final loss {out['losses'][-1][1]:.4f} "
+          f"in {out['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,364 @@
+"""The paper's CNN models as splittable JAX networks.
+
+Layer granularity matches the paper: one entry per *PyTorch module*, which is
+how the paper counts layers (AlexNet 21, VGG11 29, VGG13 33, VGG16 39,
+MobileNetV2 21 -- verified against torchvision's module lists).  Each layer
+knows how to (a) infer its output shape, (b) init parameters, (c) apply, and
+(d) report analytic FLOPs/params so `models/profiles.py` can build the
+``ModelProfile`` the optimiser consumes.
+
+Tensors are NCHW, fp32 (PyTorch-for-Android runs fp32; the paper stresses it
+does not quantise).  ``apply_split`` executes the network with an explicit
+client/server handoff, returning the boundary payload -- the runtime used by
+the split-execution tests and the serving example."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPE_BYTES = 4  # fp32
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """One paper-granularity layer."""
+
+    kind: str                    # conv/relu/relu6/maxpool/avgpool/dropout/
+                                 # linear/invres
+    name: str = ""
+    # conv / linear / invres hyper-params (unused fields stay 0)
+    cout: int = 0
+    ksize: int = 0
+    stride: int = 1
+    pad: int = 0
+    features: int = 0            # linear out features
+    expand: int = 0              # invres expansion ratio
+    out_hw: int = 0              # adaptive avgpool target
+
+
+def conv(cout, k, s=1, p=0):
+    return Layer(kind="conv", cout=cout, ksize=k, stride=s, pad=p)
+
+
+def relu():
+    return Layer(kind="relu")
+
+
+def relu6():
+    return Layer(kind="relu6")
+
+
+def maxpool(k, s):
+    return Layer(kind="maxpool", ksize=k, stride=s)
+
+
+def avgpool(out_hw):
+    return Layer(kind="avgpool", out_hw=out_hw)
+
+
+def dropout():
+    return Layer(kind="dropout")
+
+
+def linear(features):
+    return Layer(kind="linear", features=features)
+
+
+def invres(cout, stride, expand):
+    return Layer(kind="invres", cout=cout, stride=stride, expand=expand)
+
+
+def gap_linear(features):
+    """Global-average-pool + linear (MobileNetV2 classifier head: the pool
+    is functional in torchvision's forward(), not a module, so it shares a
+    paper-layer with the Linear)."""
+    return Layer(kind="gap_linear", features=features)
+
+
+# ---------------------------------------------------------------------------
+# Shape / cost inference
+# ---------------------------------------------------------------------------
+def _conv_out(h, k, s, p):
+    return (h + 2 * p - k) // s + 1
+
+
+def layer_out_shape(layer: Layer, in_shape: tuple) -> tuple:
+    """in_shape: (C, H, W) or (F,) -- batch handled outside."""
+    if layer.kind == "conv":
+        c, h, w = in_shape
+        oh = _conv_out(h, layer.ksize, layer.stride, layer.pad)
+        ow = _conv_out(w, layer.ksize, layer.stride, layer.pad)
+        return (layer.cout, oh, ow)
+    if layer.kind in ("relu", "relu6", "dropout"):
+        return in_shape
+    if layer.kind == "maxpool":
+        c, h, w = in_shape
+        oh = _conv_out(h, layer.ksize, layer.stride, 0)
+        ow = _conv_out(w, layer.ksize, layer.stride, 0)
+        return (c, oh, ow)
+    if layer.kind == "avgpool":
+        c, _, _ = in_shape
+        return (c, layer.out_hw, layer.out_hw)
+    if layer.kind in ("linear", "gap_linear"):
+        return (layer.features,)
+    if layer.kind == "invres":
+        c, h, w = in_shape
+        oh = -(-h // layer.stride)  # stride with SAME padding
+        ow = -(-w // layer.stride)
+        return (layer.cout, oh, ow)
+    raise ValueError(layer.kind)
+
+
+def layer_flops_params(layer: Layer, in_shape: tuple) -> tuple[float, float]:
+    """(FLOPs, param count) for one inference at batch 1."""
+    out = layer_out_shape(layer, in_shape)
+    n_out = float(np.prod(out))
+    if layer.kind == "conv":
+        cin = in_shape[0]
+        macs = layer.ksize**2 * cin * n_out
+        params = layer.ksize**2 * cin * layer.cout + layer.cout
+        return 2 * macs, params
+    if layer.kind in ("relu", "relu6"):
+        return n_out, 0.0
+    if layer.kind == "dropout":
+        return 0.0, 0.0
+    if layer.kind == "maxpool":
+        return layer.ksize**2 * n_out, 0.0
+    if layer.kind == "avgpool":
+        n_in = float(np.prod(in_shape))
+        return n_in, 0.0
+    if layer.kind == "linear":
+        fin = float(np.prod(in_shape))
+        return 2 * fin * layer.features, fin * layer.features + layer.features
+    if layer.kind == "gap_linear":
+        fin = float(in_shape[0])
+        pool = float(np.prod(in_shape))
+        return pool + 2 * fin * layer.features, \
+            fin * layer.features + layer.features
+    if layer.kind == "invres":
+        cin, h, w = in_shape
+        hidden = cin * layer.expand
+        oh, ow = out[1], out[2]
+        f = p = 0.0
+        if layer.expand != 1:                       # expand 1x1
+            f += 2 * cin * hidden * h * w
+            p += cin * hidden + 2 * hidden          # conv + bn
+            f += hidden * h * w                     # relu6
+        f += 2 * 9 * hidden * oh * ow               # depthwise 3x3
+        p += 9 * hidden + 2 * hidden
+        f += hidden * oh * ow                       # relu6
+        f += 2 * hidden * layer.cout * oh * ow      # project 1x1
+        p += hidden * layer.cout + 2 * layer.cout
+        if layer.stride == 1 and cin == layer.cout:
+            f += layer.cout * oh * ow               # residual add
+        return f, p
+    raise ValueError(layer.kind)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + apply
+# ---------------------------------------------------------------------------
+def _init_conv(key, cin, cout, k):
+    fan_in = cin * k * k
+    w = jax.random.normal(key, (cout, cin, k, k)) * math.sqrt(2 / fan_in)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _init_linear(key, fin, fout):
+    w = jax.random.normal(key, (fin, fout)) * math.sqrt(2 / fin)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((fout,), jnp.float32)}
+
+
+def init_layer(key, layer: Layer, in_shape: tuple) -> Any:
+    if layer.kind == "conv":
+        return _init_conv(key, in_shape[0], layer.cout, layer.ksize)
+    if layer.kind == "linear":
+        return _init_linear(key, int(np.prod(in_shape)), layer.features)
+    if layer.kind == "gap_linear":
+        return _init_linear(key, int(in_shape[0]), layer.features)
+    if layer.kind == "invres":
+        cin = in_shape[0]
+        hidden = cin * layer.expand
+        keys = jax.random.split(key, 3)
+        p = {}
+        if layer.expand != 1:
+            p["expand"] = _init_conv(keys[0], cin, hidden, 1)
+        p["dw"] = {"w": jax.random.normal(keys[1], (hidden, 1, 3, 3))
+                   * math.sqrt(2 / 9), "b": jnp.zeros((hidden,))}
+        p["project"] = _init_conv(keys[2], hidden, layer.cout, 1)
+        return p
+    return {}
+
+
+def _conv2d(x, w, b, stride, pad, groups=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups)
+    return y + b[None, :, None, None]
+
+
+def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
+                train: bool = False) -> jnp.ndarray:
+    if layer.kind == "conv":
+        return _conv2d(x, params["w"], params["b"], layer.stride, layer.pad)
+    if layer.kind == "relu":
+        return jax.nn.relu(x)
+    if layer.kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if layer.kind == "dropout":
+        return x                      # inference: identity (paper: inference)
+    if layer.kind == "maxpool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, 1, layer.ksize, layer.ksize),
+            (1, 1, layer.stride, layer.stride), "VALID")
+    if layer.kind == "avgpool":
+        # Adaptive average pool to (out_hw, out_hw).
+        n, c, h, w = x.shape
+        t = layer.out_hw
+        kh, kw = h // t, w // t
+        x = x[:, :, :kh * t, :kw * t]
+        x = x.reshape(n, c, t, kh, t, kw)
+        return x.mean(axis=(3, 5))
+    if layer.kind == "linear":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return x @ params["w"] + params["b"]
+    if layer.kind == "gap_linear":
+        if x.ndim == 4:
+            x = x.mean(axis=(2, 3))
+        return x @ params["w"] + params["b"]
+    if layer.kind == "invres":
+        y = x
+        hidden_in = x
+        if "expand" in params:
+            y = _conv2d(y, params["expand"]["w"], params["expand"]["b"], 1, 0)
+            y = jnp.clip(y, 0.0, 6.0)
+        y = _conv2d(y, params["dw"]["w"], params["dw"]["b"], layer.stride, 1,
+                    groups=y.shape[1])
+        y = jnp.clip(y, 0.0, 6.0)
+        y = _conv2d(y, params["project"]["w"], params["project"]["b"], 1, 0)
+        if layer.stride == 1 and hidden_in.shape == y.shape:
+            y = y + hidden_in
+        return y
+    raise ValueError(layer.kind)
+
+
+# ---------------------------------------------------------------------------
+# Model definitions (module lists match torchvision; counts match the paper)
+# ---------------------------------------------------------------------------
+def _vgg_features(cfg: list) -> list[Layer]:
+    layers = []
+    for v in cfg:
+        if v == "M":
+            layers.append(maxpool(2, 2))
+        else:
+            layers += [conv(v, 3, 1, 1), relu()]
+    return layers
+
+
+_CLASSIFIER_VGG = [linear(4096), relu(), dropout(),
+                   linear(4096), relu(), dropout(), linear(1000)]
+
+ALEXNET = [
+    conv(64, 11, 4, 2), relu(), maxpool(3, 2),
+    conv(192, 5, 1, 2), relu(), maxpool(3, 2),
+    conv(384, 3, 1, 1), relu(),
+    conv(256, 3, 1, 1), relu(),
+    conv(256, 3, 1, 1), relu(), maxpool(3, 2),
+    avgpool(6),
+    dropout(), linear(4096), relu(),
+    dropout(), linear(4096), relu(), linear(1000),
+]                                                     # 21 layers
+
+VGG11 = _vgg_features([64, "M", 128, "M", 256, 256, "M",
+                       512, 512, "M", 512, 512, "M"]) \
+    + [avgpool(7)] + _CLASSIFIER_VGG                  # 29 layers
+
+VGG13 = _vgg_features([64, 64, "M", 128, 128, "M", 256, 256, "M",
+                       512, 512, "M", 512, 512, "M"]) \
+    + [avgpool(7)] + _CLASSIFIER_VGG                  # 33 layers
+
+VGG16 = _vgg_features([64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                       512, 512, 512, "M", 512, 512, 512, "M"]) \
+    + [avgpool(7)] + _CLASSIFIER_VGG                  # 39 layers
+
+_MBV2_SETTING = [  # (expand, cout, repeats, stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+
+
+def _mobilenet_v2() -> list[Layer]:
+    layers: list[Layer] = [conv(32, 3, 2, 1)]         # ConvBNReLU stem
+    cin = 32
+    for t, c, n, s in _MBV2_SETTING:
+        for i in range(n):
+            layers.append(invres(c, s if i == 0 else 1, t))
+            cin = c
+    layers.append(conv(1280, 1, 1, 0))                # last ConvBNReLU
+    layers.append(dropout())
+    layers.append(gap_linear(1000))
+    return layers                                     # 21 layers
+
+
+MOBILENET_V2 = _mobilenet_v2()
+
+CNN_MODELS: dict[str, list[Layer]] = {
+    "alexnet": ALEXNET,        # 21
+    "vgg11": VGG11,            # 29
+    "vgg13": VGG13,            # 33
+    "vgg16": VGG16,            # 39
+    "mobilenetv2": MOBILENET_V2,  # 21
+}
+
+INPUT_SHAPE = (3, 224, 224)
+
+
+# ---------------------------------------------------------------------------
+# Whole-network helpers
+# ---------------------------------------------------------------------------
+def shapes_through(layers: list[Layer],
+                   in_shape: tuple = INPUT_SHAPE) -> list[tuple]:
+    """Per-layer output shapes (len == len(layers))."""
+    out = []
+    shape = in_shape
+    for l in layers:
+        shape = layer_out_shape(l, shape)
+        out.append(shape)
+    return out
+
+
+def init_cnn(key, layers: list[Layer], in_shape: tuple = INPUT_SHAPE):
+    params = []
+    shape = in_shape
+    for l in layers:
+        key, sub = jax.random.split(key)
+        params.append(init_layer(sub, l, shape))
+        shape = layer_out_shape(l, shape)
+    return params
+
+
+def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
+              stop: int | None = None):
+    """Run layers [start, stop) -- the split runtime building block."""
+    stop = len(layers) if stop is None else stop
+    for i in range(start, stop):
+        x = apply_layer(layers[i], params[i], x)
+    return x
+
+
+def apply_split(layers: list[Layer], params, x, split_index: int):
+    """Client runs [0, l1), payload crosses the link, server runs [l1, L).
+
+    Returns (logits, boundary_payload) so callers can account the transfer."""
+    boundary = apply_cnn(layers, params, x, start=0, stop=split_index)
+    logits = apply_cnn(layers, params, boundary, start=split_index)
+    return logits, boundary

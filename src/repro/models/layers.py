@@ -1,0 +1,507 @@
+"""Transformer block library covering every assigned architecture family:
+
+* GQA attention (RoPE, optional qk-norm, causal / bidirectional / sliding
+  window, KV-cache decode with ring buffer for windowed caches),
+* SwiGLU dense MLP,
+* top-k MoE with sort-based capacity dispatch (scalable: no (T,E,C) one-hot
+  -- FLOPs stay ~= active FLOPs, the property the roofline depends on),
+* Mamba2 (SSD) block with chunked parallel scan + single-step decode,
+* RWKV6 time-mix / channel-mix with recurrent state + single-step decode.
+
+All functions are pure (params as pytrees); layer stacking/scan lives in
+``models/transformer.py``.  Simplifications vs the reference repos are
+documented in DESIGN.md section 9: RWKV6 uses static token-shift lerp
+(not ddlerp LoRA), Mamba2's short conv covers the x stream only."""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# Dry-run cost-extrapolation knob (see launch/dryrun.py): lax.scan unroll
+# factor for the sequential inner scans (mamba2 chunks, rwkv6 tokens).
+SCAN_UNROLL = 1
+
+# Tensor-parallel sharding-hint mesh (set by launch/partition.py during
+# lowering; None = no hints).  Used where GSPMD propagation picks a
+# replicated layout for scan inputs (measured in section-Perf P3).
+HINT_AXIS = None
+HINT_MESH = None
+
+
+def _hint(x, spec):
+    """with_sharding_constraint against HINT_MESH; no-op when disabled
+    or when a named dim does not divide the axis size."""
+    if HINT_AXIS is None or HINT_MESH is None:
+        return x
+    resolved = tuple(HINT_AXIS if a == "model" else a for a in spec)
+    for dim, name in zip(x.shape, resolved):
+        if name is not None and dim % HINT_MESH.shape[name] != 0:
+            return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(
+            HINT_MESH, jax.sharding.PartitionSpec(*resolved)))
+
+
+# ---------------------------------------------------------------------------
+# Norms and RoPE
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    # fold the scale into the f32 math and downcast ONCE: consumers (and
+    # the partitioner's resharding, section-Perf P3) then move bf16, not f32
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 1e4) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) absolute token positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA)
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, M, KV, hd)
+    v: jnp.ndarray          # (B, M, KV, hd)
+    slot_pos: jnp.ndarray   # (M,) absolute position stored in each slot, -1 empty
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kv, hd), dtype),
+        v=jnp.zeros((batch, max_len, kv, hd), dtype),
+        slot_pos=jnp.full((max_len,), -1, jnp.int32))
+
+
+def init_attn_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dtype) * (s / cfg.num_layers),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention(cfg: ModelConfig, p, x: jnp.ndarray, *,
+              positions: jnp.ndarray,
+              cache: KVCache | None = None,
+              causal: bool = True) -> tuple[jnp.ndarray, KVCache | None]:
+    """x: (B, S, d). positions: (B, S). If cache is given, new K/V are
+    written at slot ``pos % M`` (a ring buffer: exact for both full caches
+    M >= total length and sliding-window caches M == window)."""
+    B, S, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    g = h // kv
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (x @ p["wk"]).reshape(B, S, kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        M = cache.k.shape[1]
+        slots = positions[0] % M       # (S,) same slot layout for all rows
+        ck = cache.k.at[:, slots].set(k)
+        cv = cache.v.at[:, slots].set(v)
+        spos = cache.slot_pos.at[slots].set(positions[0])
+        keys, vals = ck, cv
+        key_pos = spos[None, :]                          # (1, M)
+        cache = KVCache(ck, cv, spos)
+    else:
+        keys, vals = k, v
+        key_pos = positions                              # (B, S)
+    T = keys.shape[1]
+
+    qg = q.reshape(B, S, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, keys,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    qp = positions[:, None, None, :, None].astype(jnp.int32)   # (B,1,1,S,1)
+    kp = key_pos[:, None, None, None, :].astype(jnp.int32)     # (.,1,1,1,T)
+    valid = kp >= 0
+    if causal:
+        valid &= kp <= qp
+    if cfg.sliding_window:
+        valid &= kp > qp - cfg.sliding_window
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    y = jnp.einsum("bkgst,btkh->bskgh", w, vals)
+    y = y.reshape(B, S, h * hd) @ p["wo"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp_params(d: int, ff: int, key, dtype=jnp.bfloat16, n_layers=32):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    return {"wg": jax.random.normal(ks[0], (d, ff), dtype) * s,
+            "wu": jax.random.normal(ks[1], (d, ff), dtype) * s,
+            "wd": jax.random.normal(ks[2], (ff, d), dtype)
+            * (1.0 / math.sqrt(ff) / n_layers)}
+
+
+def swiglu(p, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+def init_moe_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.e_ff
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s,
+        "wg": jax.random.normal(ks[1], (e, d, ff), dtype) * s,
+        "wu": jax.random.normal(ks[2], (e, d, ff), dtype) * s,
+        "wd": jax.random.normal(ks[3], (e, ff, d), dtype)
+        * (1.0 / math.sqrt(ff) / cfg.num_layers),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.experts_per_token
+                      * cfg.moe_capacity_factor / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)   # round up to 8 for lane alignment
+
+
+def moe(cfg: ModelConfig, p, x: jnp.ndarray):
+    """x: (B, S, d) -> (y, aux) with sort-based top-k capacity dispatch.
+
+    When expert parallelism is configured (launch/partition.py sets
+    moe_ep.EP_MESH and E divides the model axis), dispatch goes through
+    the shard_map all-to-all path instead -- see models/moe_ep.py.
+
+    No (T, E, C) one-hot: tokens are argsorted by expert id and scattered
+    into an (E*C) slot table, so compiled FLOPs stay proportional to
+    *active* parameters -- the property the roofline report depends on.
+    Overflowing tokens beyond capacity are dropped (their combine weight
+    never lands in a slot); aux carries the router load-balance loss."""
+    from repro.models import moe_ep
+    if moe_ep.ep_enabled(cfg, x.shape):
+        return moe_ep.moe_expert_parallel(cfg, p, x)
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = moe_capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Flatten the T*K (token, expert) pairs, group by expert via argsort.
+    flat_e = eidx.reshape(-1)                                # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank of each entry within its expert group
+    counts = jnp.bincount(se, length=E)                      # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - starts[se]
+    keep = rank < C
+    # dropped assignments land in a trash slot past the buffer (a slot-0
+    # write would clobber a kept token: duplicate-index scatter order is
+    # unspecified)
+    slot = jnp.where(keep, se * C + rank, E * C)             # (T*K,)
+
+    # slot tables: token index and gate per (E*C) slot (+1 trash)
+    slot_tok = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        st.astype(jnp.int32))[:-1]
+    slot_gate = jnp.zeros((E * C + 1,), flat_g.dtype).at[slot].set(
+        sg)[:-1]
+
+    xe = xt[slot_tok].reshape(E, C, d)                       # gather
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])              # (E, C, d)
+    ye = ye.reshape(E * C, d) * slot_gate[:, None].astype(ye.dtype)
+    y = jnp.zeros((T, d), ye.dtype).at[slot_tok].add(ye)
+
+    # Switch-style load-balance aux loss.
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.bincount(eidx.reshape(-1), length=E) / (T * K)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+class MambaState(NamedTuple):
+    h: jnp.ndarray       # (B, nh, hp, ds) SSD state
+    conv: jnp.ndarray    # (B, k-1, inner) short-conv tail
+
+
+CONV_K = 4
+
+
+def init_mamba_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    nh, ds, G = cfg.n_mamba_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    proj_out = 2 * inner + 2 * G * ds + nh
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (CONV_K, inner), dtype) * 0.5,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (inner, d), dtype)
+        * (1.0 / math.sqrt(inner) / cfg.num_layers),
+        "gate_norm": jnp.ones((inner,), dtype),
+    }
+
+
+def _mamba_split(cfg: ModelConfig, z_all: jnp.ndarray):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    nh, ds, G = cfg.n_mamba_heads, cfg.ssm_state, cfg.ssm_groups
+    z, xs, B, C, dt = jnp.split(
+        z_all, [inner, 2 * inner, 2 * inner + G * ds,
+                2 * inner + 2 * G * ds], axis=-1)
+    return z, xs, B, C, dt
+
+
+def _causal_conv(xs: jnp.ndarray, w: jnp.ndarray,
+                 tail: jnp.ndarray | None = None):
+    """Depthwise causal conv, k = CONV_K. xs: (B, S, inner); tail: the
+    previous k-1 inputs for streaming decode."""
+    B, S, inner = xs.shape
+    if tail is None:
+        tail = jnp.zeros((B, CONV_K - 1, inner), xs.dtype)
+    full = jnp.concatenate([tail, xs], axis=1)           # (B, S+k-1, inner)
+    out = sum(full[:, i:i + S, :] * w[i] for i in range(CONV_K))
+    new_tail = full[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(out), new_tail
+
+
+def mamba2(cfg: ModelConfig, p, x: jnp.ndarray,
+           state: MambaState | None = None, chunk: int = 64):
+    """Full-sequence (chunked SSD) form. x: (B, S, d) -> (y, new_state)."""
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    nh, ds, G = cfg.n_mamba_heads, cfg.ssm_state, cfg.ssm_groups
+    hp = inner // nh
+    z, xs, Bm, Cm, dt = _mamba_split(cfg, x @ p["in_proj"])
+    xs, new_tail = _causal_conv(
+        xs, p["conv_w"], None if state is None else state.conv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+    # heads
+    xh = xs.reshape(B, S, nh, hp).astype(jnp.float32)
+    rep = nh // G
+    Bh = jnp.repeat(Bm.reshape(B, S, G, ds), rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, S, G, ds), rep, axis=2).astype(jnp.float32)
+    la = dt * A[None, None, :]                                   # log decay
+
+    # pad to chunk multiple
+    nC = -(-S // chunk)
+    pad = nC * chunk - S
+    def padc(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+    xh, Bh, Ch = padc(xh), padc(Bh), padc(Ch)
+    la_p, dt_p = padc(la), padc(dt)
+    xh = xh.reshape(B, nC, chunk, nh, hp)
+    Bh = Bh.reshape(B, nC, chunk, nh, ds)
+    Ch = Ch.reshape(B, nC, chunk, nh, ds)
+    la_c = la_p.reshape(B, nC, chunk, nh)
+    dt_c = dt_p.reshape(B, nC, chunk, nh)
+
+    cs = jnp.cumsum(la_c, axis=2)                        # within-chunk cumsum
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (B,nC,t,u,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[t] = sum_u (C_t.B_u) decay[t,u] dt_u x_u
+    cb = jnp.einsum("bcthn,bcuhn->bctuh", Ch, Bh)
+    att = cb * decay
+    y_intra = jnp.einsum("bctuh,bcuh,bcuhp->bcthp", att, dt_c, xh)
+
+    # inter-chunk: scan carried state
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (B,nC,nh)
+    # state contribution of each chunk: sum_u exp(cs_last - cs_u) dt_u B_u x_u^T
+    w_u = jnp.exp(cs[:, :, -1:, :] - cs) * dt_c          # (B,nC,chunk,nh)
+    chunk_state = jnp.einsum("bcuh,bcuhn,bcuhp->bchpn", w_u, Bh, xh)
+
+    h0 = jnp.zeros((B, nh, hp, ds), jnp.float32) if state is None \
+        else state.h.astype(jnp.float32)
+
+    def step(h, ins):
+        cdec, cstate, C_c, cs_c = ins
+        # y_inter[t] = C_t . (h * exp(cs_t))
+        y_int = jnp.einsum("bthn,bhpn,bth->bthp", C_c, h, jnp.exp(cs_c))
+        h_new = h * cdec[:, :, None, None] + cstate
+        return h_new, y_int
+
+    xs_scan = (chunk_decay.transpose(1, 0, 2),
+               chunk_state.transpose(1, 0, 2, 3, 4),
+               Ch.transpose(1, 0, 2, 3, 4),
+               cs.transpose(1, 0, 2, 3))
+    h_fin, y_inter = jax.lax.scan(step, h0, xs_scan, unroll=SCAN_UNROLL)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)           # (B,nC,chunk,nh,hp)
+
+    y = (y_intra + y_inter).reshape(B, nC * chunk, nh, hp)[:, :S]
+    y = y + xh.reshape(B, nC * chunk, nh, hp)[:, :S] * p["D"][None, None, :, None]
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(h=h_fin.astype(jnp.float32),
+                                         conv=new_tail)
+
+
+def mamba2_step(cfg: ModelConfig, p, x: jnp.ndarray, state: MambaState):
+    """Single-token decode. x: (B, 1, d)."""
+    B, S, d = x.shape
+    assert S == 1
+    inner = cfg.ssm_expand * d
+    nh, ds, G = cfg.n_mamba_heads, cfg.ssm_state, cfg.ssm_groups
+    hp = inner // nh
+    z, xs, Bm, Cm, dt = _mamba_split(cfg, x @ p["in_proj"])
+    xs, new_tail = _causal_conv(xs, p["conv_w"], state.conv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None, :])                                 # (B,nh)
+    xh = xs.reshape(B, nh, hp).astype(jnp.float32)
+    rep = nh // G
+    Bh = jnp.repeat(Bm.reshape(B, G, ds), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, ds), rep, axis=1).astype(jnp.float32)
+    h = state.h * a[:, :, None, None] \
+        + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], MambaState(h=h, conv=new_tail)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# ---------------------------------------------------------------------------
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray      # (B, nh, hd, hd)
+    x_tm: jnp.ndarray     # (B, d) last input seen by time-mix
+    x_cm: jnp.ndarray     # (B, d) last input seen by channel-mix
+
+
+RWKV_HD = 64
+
+
+def init_rwkv_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),     # r,k,v,w,g token-shift mix
+        "wr": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "ww": jax.random.normal(ks[3], (d, d), dtype) * 0.1 * s,
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),
+        "wg": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "u": jnp.zeros((d,), jnp.float32),       # bonus for current token
+        "wo": jax.random.normal(ks[5], (d, d), dtype)
+        * (s / cfg.num_layers),
+        "ln_x": jnp.ones((d,), dtype),
+        "mu_cm": 0.5 * jnp.ones((2, d), dtype),
+        "ck": jax.random.normal(ks[6], (d, ff), dtype) * s,
+        "cv": jax.random.normal(ks[7], (ff, d), dtype)
+        * (1.0 / math.sqrt(ff) / cfg.num_layers),
+        "cr": jax.random.normal(jax.random.fold_in(key, 9), (d, d), dtype) * s,
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray):
+    """x: (B,S,d); last: (B,d) -> x_{t-1} sequence and new last."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev, x[:, -1, :]
+
+
+def rwkv6(cfg: ModelConfig, p, x: jnp.ndarray,
+          state: RWKVState | None = None):
+    """Full-sequence RWKV6. x: (B,S,d) -> (y, new_state).  Data-dependent
+    per-channel decay w_t = exp(-exp(ww x + b)); static token-shift lerp."""
+    B, S, d = x.shape
+    nh, hd = d // RWKV_HD, RWKV_HD
+    if state is None:
+        state = RWKVState(wkv=jnp.zeros((B, nh, hd, hd), jnp.float32),
+                          x_tm=jnp.zeros((B, d), x.dtype),
+                          x_cm=jnp.zeros((B, d), x.dtype))
+    prev, new_last = _token_shift(x, state.x_tm)
+    mix = lambda i: x * p["mu"][i] + prev * (1 - p["mu"][i])
+    r = (mix(0) @ p["wr"]).reshape(B, S, nh, hd)
+    k = (mix(1) @ p["wk"]).reshape(B, S, nh, hd)
+    v = (mix(2) @ p["wv"]).reshape(B, S, nh, hd)
+    wlog = -jnp.exp((mix(3) @ p["ww"]).astype(jnp.float32)
+                    + p["w_bias"])                       # (B,S,d) log decay
+    w = jnp.exp(wlog).reshape(B, S, nh, hd)              # decay in (0,1)
+    g = jax.nn.silu(mix(4) @ p["wg"])
+    u = p["u"].reshape(nh, hd)
+
+    def step(s_wkv, ins):
+        rt, kt, vt, wt = ins                             # (B,nh,hd) each
+        rt = rt.astype(jnp.float32)                      # stream stays bf16;
+        kt = kt.astype(jnp.float32)                      # state math in f32
+        vt = vt.astype(jnp.float32)
+        wt = wt.astype(jnp.float32)
+        kv = kt[:, :, :, None] * vt[:, :, None, :]       # (B,nh,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         s_wkv + u[None, :, :, None] * kv)
+        s_new = s_wkv * wt[:, :, :, None] + kv
+        return s_new, out
+
+    # r/k/v stream in model dtype (halves the HBM/collective traffic of
+    # the scan inputs -- section-Perf P3); decay w streams f32 so decays
+    # near 1.0 keep their precision over long contexts.
+    xs = (r.transpose(1, 0, 2, 3),
+          k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3),
+          w.transpose(1, 0, 2, 3).astype(jnp.float32))
+    s_fin, outs = jax.lax.scan(step, state.wkv, xs, unroll=SCAN_UNROLL)
+    y = outs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(y, p["ln_x"], cfg.norm_eps) * g
+    y = y @ p["wo"]
+
+    # channel-mix
+    prev_c, new_last_c = _token_shift(x + y, state.x_cm)
+    xc = x + y
+    mixc = lambda i: xc * p["mu_cm"][i] + prev_c * (1 - p["mu_cm"][i])
+    kk = jnp.square(jax.nn.relu(mixc(0) @ p["ck"]))
+    out_c = (kk @ p["cv"]) * jax.nn.sigmoid(mixc(1) @ p["cr"])
+    return y + out_c, RWKVState(wkv=s_fin, x_tm=new_last, x_cm=new_last_c)

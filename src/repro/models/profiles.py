@@ -1,0 +1,91 @@
+"""Analytic per-layer cost profiles.
+
+Builds the ``ModelProfile`` the SmartSplit optimiser consumes from (a) the
+paper's CNNs (layer granularity = PyTorch module, exactly as the paper
+counts) and (b) the assigned transformer architectures (layer granularity =
+transformer block; boundary payload = hidden state (+ recurrent state for
+SSM/RWKV blocks downstream of the cut, + KV cache handoff when serving).
+
+Analytic FLOPs are cross-checked against compiled-HLO ``cost_analysis`` in
+``tests/test_costs_vs_hlo.py``."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costs import LayerProfile, ModelProfile
+from repro.models import cnn as cnn_lib
+
+
+# ---------------------------------------------------------------------------
+# Paper CNNs
+# ---------------------------------------------------------------------------
+def cnn_profile(name: str, batch: int = 1,
+                dtype_bytes: int = cnn_lib.DTYPE_BYTES,
+                in_shape: tuple = cnn_lib.INPUT_SHAPE) -> ModelProfile:
+    layers = cnn_lib.CNN_MODELS[name]
+    shapes = cnn_lib.shapes_through(layers, in_shape)
+    profs = []
+    shape = in_shape
+    for layer, out_shape in zip(layers, shapes):
+        flops, params = cnn_lib.layer_flops_params(layer, shape)
+        act = float(np.prod(out_shape)) * dtype_bytes * batch
+        profs.append(LayerProfile(
+            name=f"{name}.{len(profs)}.{layer.kind}", kind=layer.kind,
+            flops=flops * batch, param_bytes=params * dtype_bytes,
+            act_bytes=act, boundary_bytes=act))
+        shape = out_shape
+    return ModelProfile(
+        name=name, layers=tuple(profs),
+        input_bytes=float(np.prod(in_shape)) * dtype_bytes * batch)
+
+
+# ---------------------------------------------------------------------------
+# Transformer architectures (assigned pool)
+# ---------------------------------------------------------------------------
+def transformer_profile(cfg, *, seq_len: int, batch: int,
+                        mode: str = "prefill",
+                        dtype_bytes: int = 2) -> ModelProfile:
+    """Per-block profile for a ``configs.base.ModelConfig``.
+
+    mode: 'prefill' (process seq_len tokens) or 'decode' (one token against
+    a cache of seq_len).  The boundary payload if split after block i is the
+    hidden state (batch, tokens, d_model) plus, for decode, nothing extra --
+    recurrent/KV state lives on whichever side owns the layer; state that
+    must *migrate* at plan time is charged via ``state_bytes`` so the
+    optimiser sees the cost of cutting inside a recurrent stack."""
+    from repro.configs.base import ModelConfig  # local import, no cycle
+    assert isinstance(cfg, ModelConfig)
+    tokens = batch * (seq_len if mode == "prefill" else 1)
+    d = cfg.d_model
+    hidden_bytes = float(tokens * d) * dtype_bytes
+    profs = []
+    for i, block in enumerate(cfg.block_kinds()):
+        flops = cfg.block_flops(block, seq_len=seq_len, batch=batch,
+                                mode=mode)
+        params = cfg.block_params(block)
+        state = cfg.block_state_bytes(block, batch=batch,
+                                      dtype_bytes=dtype_bytes)
+        profs.append(LayerProfile(
+            name=f"{cfg.name}.{i}.{block}", kind=block,
+            flops=flops, param_bytes=params * dtype_bytes,
+            act_bytes=hidden_bytes, boundary_bytes=hidden_bytes,
+            state_bytes=state))
+    # Embedding + unembedding bracket the stack; fold them into first/last.
+    embed_flops = 0.0
+    unembed_flops = 2.0 * tokens * d * cfg.padded_vocab
+    profs[0] = LayerProfile(
+        name=profs[0].name, kind=profs[0].kind,
+        flops=profs[0].flops + embed_flops,
+        param_bytes=profs[0].param_bytes + cfg.padded_vocab * d * dtype_bytes,
+        act_bytes=profs[0].act_bytes, boundary_bytes=profs[0].boundary_bytes,
+        state_bytes=profs[0].state_bytes)
+    last = profs[-1]
+    profs[-1] = LayerProfile(
+        name=last.name, kind=last.kind, flops=last.flops + unembed_flops,
+        param_bytes=last.param_bytes
+        + (0 if cfg.tie_embeddings else cfg.padded_vocab * d * dtype_bytes),
+        act_bytes=last.act_bytes, boundary_bytes=last.boundary_bytes,
+        state_bytes=last.state_bytes)
+    input_bytes = float(batch * (seq_len if mode == "prefill" else 1)) * 4
+    return ModelProfile(name=f"{cfg.name}:{mode}", layers=tuple(profs),
+                        input_bytes=max(input_bytes, 1.0))

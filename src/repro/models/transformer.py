@@ -1,0 +1,451 @@
+"""Composable transformer LM covering all 10 assigned architectures.
+
+One parameter pytree, one ``forward`` for train/prefill, one ``decode_step``
+for serving.  Homogeneous layer stacks are *scanned* (stacked weights,
+``jax.lax.scan``) so HLO size and compile time are depth-independent --
+required for the 80-layer dry-runs.  Zamba2's pattern (shared attention
+block every k Mamba2 layers, weights shared across applications) is an
+outer scan over segments with the shared block's weights as a closure
+constant.
+
+Batch conventions:
+  batch = {"tokens": (B,S) int32, "labels": (B,S) int32 (train),
+           "loss_mask": (B,S) f32 (train),
+           "prefix_embeds": (B,P,d) (vlm/audio stub frontends)}
+For frontend archs the embeddings REPLACE token embedding for the first P
+positions (vision patches / audio frames) -- the stub carve-out."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_block(cfg: ModelConfig, kind: str, key, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn_mlp", "enc_attn"):
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": L.init_attn_params(cfg, ks[0], dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "mlp": L.init_mlp_params(d, cfg.d_ff, ks[1], dtype,
+                                         cfg.num_layers)}
+    if kind == "attn_moe":
+        return {"ln1": jnp.ones((d,), dtype),
+                "attn": L.init_attn_params(cfg, ks[0], dtype),
+                "ln2": jnp.ones((d,), dtype),
+                "moe": L.init_moe_params(cfg, ks[1], dtype)}
+    if kind == "mamba":
+        return {"ln1": jnp.ones((d,), dtype),
+                "mamba": L.init_mamba_params(cfg, ks[0], dtype)}
+    if kind == "rwkv":
+        return {"ln1": jnp.ones((d,), dtype),
+                "rwkv": L.init_rwkv_params(cfg, ks[0], dtype)}
+    raise ValueError(kind)
+
+
+def _zamba_segments(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_seg, n_slots): layers padded to full segments of ``attn_every``.
+
+    Uniform segments keep the whole stack one doubly-nested scan (no tail
+    special case): padded slots run masked (their output is discarded via
+    jnp.where) -- the same SPMD-uniformity idiom the SmartSplit two-stage
+    executor uses for arbitrary split indices."""
+    n_seg = -(-cfg.num_layers // cfg.attn_every)
+    return n_seg, n_seg * cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    keys = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (V, d), dtype) * 0.02,
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(keys[1], (d, V), dtype) \
+            * (1.0 / d ** 0.5)
+
+    if cfg.pattern == "mamba" and cfg.attn_every:
+        n_seg, n_slots = _zamba_segments(cfg)
+        bkeys = jax.random.split(keys[2], n_slots)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(cfg, "mamba", k, dtype))(bkeys)
+        params["shared"] = _init_block(cfg, "attn_mlp", keys[4], dtype)
+    else:
+        bkeys = jax.random.split(keys[2], cfg.num_layers)
+        kind = cfg.pattern
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(cfg, kind, k, dtype))(bkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+class Cache(NamedTuple):
+    pos: jnp.ndarray                 # () int32: number of tokens consumed
+    kv: Any = None                   # stacked L.KVCache, leading axis = layer
+    ssm: Any = None                  # stacked L.MambaState
+    rwkv: Any = None                 # stacked L.RWKVState
+    shared_kv: Any = None            # zamba: (n_seg,) stacked KVCache
+
+
+def cache_max_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    M = cache_max_len(cfg, max_len)
+
+    def stack(n, fn):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+                            fn())
+
+    pos = jnp.zeros((), jnp.int32)
+    if cfg.pattern in ("attn_mlp", "attn_moe"):
+        kv = stack(cfg.num_layers,
+                   lambda: L.init_kv_cache(cfg, batch, M, dtype))
+        return Cache(pos=pos, kv=kv)
+    if cfg.pattern == "rwkv":
+        d = cfg.d_model
+        nh = d // L.RWKV_HD
+        st = stack(cfg.num_layers, lambda: L.RWKVState(
+            wkv=jnp.zeros((batch, nh, L.RWKV_HD, L.RWKV_HD), jnp.float32),
+            x_tm=jnp.zeros((batch, d), dtype),
+            x_cm=jnp.zeros((batch, d), dtype)))
+        return Cache(pos=pos, rwkv=st)
+    if cfg.pattern == "mamba":
+        inner = cfg.ssm_expand * cfg.d_model
+        nh, hp = cfg.n_mamba_heads, inner // cfg.n_mamba_heads
+
+        def one():
+            return L.MambaState(
+                h=jnp.zeros((batch, nh, hp, cfg.ssm_state), jnp.float32),
+                conv=jnp.zeros((batch, L.CONV_K - 1, inner), dtype))
+        shared_kv = None
+        n_states = cfg.num_layers
+        if cfg.attn_every:
+            n_seg, n_slots = _zamba_segments(cfg)
+            n_states = n_slots          # padded slots carry (unused) state
+            shared_kv = stack(n_seg,
+                              lambda: L.init_kv_cache(cfg, batch, M, dtype))
+        ssm = stack(n_states, one)
+        return Cache(pos=pos, ssm=ssm, shared_kv=shared_kv)
+    raise ValueError(cfg.pattern)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+def _apply_block(cfg: ModelConfig, kind: str, p, x, *, positions,
+                 kv_cache=None, ssm_state=None, rwkv_state=None,
+                 decode: bool = False):
+    """Returns (x, (new_kv, new_ssm, new_rwkv), aux_loss).
+
+    The cache slots may carry dummy zero arrays (scan xs cannot hold None);
+    a slot participates only when it is the right state NamedTuple."""
+    aux = jnp.zeros((), jnp.float32)
+    kv_real = kv_cache if isinstance(kv_cache, L.KVCache) else None
+    ssm_real = ssm_state if isinstance(ssm_state, L.MambaState) else None
+    rwkv_real = rwkv_state if isinstance(rwkv_state, L.RWKVState) else None
+    if kind in ("attn_mlp", "attn_moe", "enc_attn"):
+        h, kv_new = L.attention(cfg, p["attn"],
+                                L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                positions=positions, cache=kv_real,
+                                causal=not cfg.is_encoder)
+        kv_out = kv_new if kv_new is not None else kv_cache
+        x = x + h
+        z = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            h, aux = L.moe(cfg, p["moe"], z)
+        else:
+            h = L.swiglu(p["mlp"], z)
+        return x + h, (kv_out, ssm_state, rwkv_state), aux
+    if kind == "mamba":
+        z = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if decode:
+            h, ssm_out = L.mamba2_step(cfg, p["mamba"], z, ssm_real)
+        else:
+            h, ssm_out = L.mamba2(cfg, p["mamba"], z, ssm_real)
+        return x + h, (kv_cache, ssm_out, rwkv_state), aux
+    if kind == "rwkv":
+        z = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        h, rwkv_out = L.rwkv6(cfg, p["rwkv"], z, rwkv_real)
+        return x + h, (kv_cache, ssm_state, rwkv_out), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+def _embed_inputs(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    """Token embeddings, optionally prefixed by stub-frontend embeddings
+    (vision patches / audio frames).  Encoder-only audio archs may have no
+    tokens at all (pure frame input)."""
+    tok = batch.get("tokens")
+    x = params["embed"][tok] if tok is not None and tok.shape[-1] > 0 \
+        else None
+    if cfg.frontend != "none" and "prefix_embeds" in batch:
+        pe = batch["prefix_embeds"]
+        pe = pe.astype(x.dtype if x is not None
+                       else params["embed"].dtype)
+        x = pe if x is None else jnp.concatenate([pe, x], axis=1)
+    assert x is not None, "batch must contain tokens or prefix_embeds"
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, mode: str = "train",
+            cache: Cache | None = None, unroll_layers: bool = False):
+    """mode 'train'/'prefill'. Returns (logits, new_cache, aux_loss).
+
+    cache is only consumed/produced in prefill mode (SSM initial states /
+    KV-cache fill for subsequent decode).  unroll_layers replaces the layer
+    scans with python loops -- used only by the dry-run cost extrapolation."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    pos0 = jnp.zeros((), jnp.int32) if cache is None else cache.pos
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :] \
+        + jnp.zeros((B, 1), jnp.int32)
+
+    want_cache = cache is not None
+    use_remat = (mode == "train" and cfg.remat == "block")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.pattern == "mamba" and cfg.attn_every:
+        x, new_cache, aux_total = _zamba_forward(
+            cfg, params, x, positions, cache, use_remat, unroll_layers)
+    else:
+        kind = cfg.pattern
+
+        def body(carry, inp):
+            h, auxc = carry
+            p_i, kv_i, ssm_i, rwkv_i = inp
+            h, (kv_o, ssm_o, rwkv_o), aux = _apply_block(
+                cfg, kind, p_i, h, positions=positions,
+                kv_cache=kv_i, ssm_state=ssm_i, rwkv_state=rwkv_i)
+            return (h, auxc + aux), (kv_o, ssm_o, rwkv_o)
+
+        if use_remat:
+            body = jax.checkpoint(body)
+        n = cfg.num_layers
+        kv_in = cache.kv if want_cache else None
+        ssm_in = cache.ssm if want_cache else None
+        rwkv_in = cache.rwkv if want_cache else None
+        fill = lambda t: t if t is not None else jnp.zeros((n,), jnp.float32)
+        (x, aux_total), outs = _scan(
+            body, (x, aux_total),
+            (params["blocks"], fill(kv_in), fill(ssm_in), fill(rwkv_in)),
+            unroll_layers)
+        kv_o, ssm_o, rwkv_o = outs
+        new_cache = None
+        if want_cache:
+            new_cache = Cache(pos=pos0 + S,
+                              kv=kv_o if kv_in is not None else None,
+                              ssm=ssm_o if ssm_in is not None else None,
+                              rwkv=rwkv_o if rwkv_in is not None else None)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits, new_cache, aux_total
+
+
+def _zamba_masks(cfg):
+    """(layer_active (n_seg, k), attn_active (n_seg,)) as static arrays."""
+    import numpy as np
+    n_seg, n_slots = _zamba_segments(cfg)
+    k = cfg.attn_every
+    slot = np.arange(n_slots).reshape(n_seg, k)
+    layer_active = slot < cfg.num_layers
+    attn_active = (np.arange(n_seg) + 1) * k <= cfg.num_layers
+    return jnp.asarray(layer_active), jnp.asarray(attn_active)
+
+
+def _zamba_forward(cfg, params, x, positions, cache, use_remat,
+                   unroll_layers: bool = False):
+    """Zamba2: doubly-nested scan over uniform padded segments of
+    (attn_every mamba slots + shared attention block); shared weights are
+    closure constants, padded slots masked with jnp.where."""
+    n_seg, n_slots = _zamba_segments(cfg)
+    k = cfg.attn_every
+    want_cache = cache is not None
+    shared = params["shared"]
+    layer_active, attn_active = _zamba_masks(cfg)
+
+    def seg_body(carry, inp):
+        h, aux = carry
+        p_seg, ssm_seg, skv, act_seg, attn_act = inp
+
+        def inner(c, i):
+            hh, auxc = c
+            p_i, ssm_i, m = i
+            out, (_, ssm_o, _), a = _apply_block(
+                cfg, "mamba", p_i, hh, positions=positions, ssm_state=ssm_i)
+            hh = jnp.where(m, out, hh)
+            ssm_o = jax.tree.map(
+                lambda new, old: jnp.where(m, new, old) if
+                isinstance(old, jnp.ndarray) and old.shape == new.shape
+                else new, ssm_o, ssm_i) if isinstance(ssm_i, L.MambaState) \
+                else ssm_o
+            return (hh, auxc + a), ssm_o
+
+        (h, aux), ssm_out = _scan(inner, (h, aux),
+                                  (p_seg, ssm_seg, act_seg), unroll_layers)
+        out, (skv_o, _, _), a2 = _apply_block(
+            cfg, "attn_mlp", shared, h, positions=positions, kv_cache=skv)
+        h = jnp.where(attn_act, out, h)
+        return (h, aux + a2), (ssm_out, skv_o)
+
+    if use_remat:
+        seg_body = jax.checkpoint(seg_body)
+
+    # reshape stacked blocks (n_slots, ...) -> (n_seg, k, ...)
+    blocks = jax.tree.map(
+        lambda t: t.reshape((n_seg, k) + t.shape[1:]), params["blocks"])
+    if want_cache:
+        ssm_in = jax.tree.map(
+            lambda t: t.reshape((n_seg, k) + t.shape[1:]), cache.ssm)
+        skv_in = cache.shared_kv
+    else:
+        ssm_in = jnp.zeros((n_seg, k), jnp.float32)
+        skv_in = jnp.zeros((n_seg,), jnp.float32)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), (ssm_out, skv_out) = _scan(
+        seg_body, (x, aux0),
+        (blocks, ssm_in, skv_in, layer_active, attn_active), unroll_layers)
+
+    new_cache = None
+    if want_cache:
+        flat = jax.tree.map(
+            lambda t: t.reshape((n_slots,) + t.shape[2:]), ssm_out)
+        new_cache = Cache(pos=cache.pos + positions.shape[1], ssm=flat,
+                          shared_kv=skv_out)
+    return x, new_cache, aux
+
+
+def _scan(body, carry, xs, unroll_layers: bool):
+    """jax.lax.scan, or an equivalent python loop when the dry-run needs
+    loop-free HLO for exact cost extrapolation (see launch/dryrun.py)."""
+    if not unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+def decode_step(cfg: ModelConfig, params, tokens: jnp.ndarray,
+                cache: Cache, unroll_layers: bool = False):
+    """One-token serve step. tokens: (B, 1). Returns (logits, new_cache)."""
+    assert not cfg.is_encoder, "encoder-only archs have no decode step"
+    x = params["embed"][tokens]
+    B, S, _ = x.shape
+    positions = cache.pos + jnp.zeros((B, 1), jnp.int32)
+
+    if cfg.pattern == "mamba" and cfg.attn_every:
+        x, new_cache = _zamba_decode(cfg, params, x, positions, cache,
+                                     unroll_layers)
+    else:
+        kind = cfg.pattern
+
+        def body(h, inp):
+            p_i, kv_i, ssm_i, rwkv_i = inp
+            h, (kv_o, ssm_o, rwkv_o), _ = _apply_block(
+                cfg, kind, p_i, h, positions=positions, kv_cache=kv_i,
+                ssm_state=ssm_i, rwkv_state=rwkv_i, decode=True)
+            return h, (kv_o, ssm_o, rwkv_o)
+
+        n = cfg.num_layers
+        fill = lambda t: t if t is not None else jnp.zeros((n,), jnp.float32)
+        x, (kv_o, ssm_o, rwkv_o) = _scan(
+            body, x, (params["blocks"], fill(cache.kv), fill(cache.ssm),
+                      fill(cache.rwkv)), unroll_layers)
+        new_cache = Cache(pos=cache.pos + 1,
+                          kv=kv_o if cache.kv is not None else None,
+                          ssm=ssm_o if cache.ssm is not None else None,
+                          rwkv=rwkv_o if cache.rwkv is not None else None)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ unembed).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _zamba_decode(cfg, params, x, positions, cache: Cache,
+                  unroll_layers: bool = False):
+    n_seg, n_slots = _zamba_segments(cfg)
+    k = cfg.attn_every
+    shared = params["shared"]
+    layer_active, attn_active = _zamba_masks(cfg)
+
+    def seg_body(h, inp):
+        p_seg, ssm_seg, skv, act_seg, attn_act = inp
+
+        def inner(hh, i):
+            p_i, ssm_i, m = i
+            out, (_, ssm_o, _), _ = _apply_block(
+                cfg, "mamba", p_i, hh, positions=positions,
+                ssm_state=ssm_i, decode=True)
+            hh = jnp.where(m, out, hh)
+            ssm_o = jax.tree.map(lambda new, old: jnp.where(m, new, old),
+                                 ssm_o, ssm_i)
+            return hh, ssm_o
+
+        h, ssm_out = _scan(inner, h, (p_seg, ssm_seg, act_seg),
+                           unroll_layers)
+        out, (skv_o, _, _), _ = _apply_block(
+            cfg, "attn_mlp", shared, h, positions=positions, kv_cache=skv)
+        h = jnp.where(attn_act, out, h)
+        return h, (ssm_out, skv_o)
+
+    blocks = jax.tree.map(
+        lambda t: t.reshape((n_seg, k) + t.shape[1:]), params["blocks"])
+    ssm_in = jax.tree.map(
+        lambda t: t.reshape((n_seg, k) + t.shape[1:]), cache.ssm)
+    x, (ssm_out, skv_out) = _scan(
+        seg_body, x,
+        (blocks, ssm_in, cache.shared_kv, layer_active, attn_active),
+        unroll_layers)
+
+    flat = jax.tree.map(lambda t: t.reshape((n_slots,) + t.shape[2:]),
+                        ssm_out)
+    return x, Cache(pos=cache.pos + 1, ssm=flat, shared_kv=skv_out)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def loss_fn(cfg: ModelConfig, params, batch, aux_weight: float = 0.01,
+            unroll_layers: bool = False):
+    """Next-token CE (decoder) or per-frame classification CE (encoder).
+    Returns (loss, metrics)."""
+    logits, _, aux = forward(cfg, params, batch, mode="train",
+                             unroll_layers=unroll_layers)
+    labels = batch["labels"]
+    if cfg.frontend != "none" and logits.shape[1] != labels.shape[1]:
+        # frontend prefix positions carry no labels
+        logits = logits[:, -labels.shape[1]:]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -(ll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}

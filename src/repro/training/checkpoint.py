@@ -1,0 +1,89 @@
+"""Checkpointing: pytree -> directory of .npz shards + a JSON manifest.
+
+Single-host implementation (arrays are gathered with jax.device_get); the
+manifest records tree structure, shapes, dtypes and the training step so
+restores are validated structurally before any array is touched."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> dict[str, Any]:
+    flat = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            flat.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        for f, v in zip(tree._fields, tree):
+            flat.update(_flatten(v, f"{prefix}/{f}"))
+        flat[f"{prefix}/__namedtuple__"] = type(tree).__name__
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            flat.update(_flatten(v, f"{prefix}/{i}"))
+        flat[f"{prefix}/__seq__"] = type(tree).__name__
+    elif tree is None:
+        flat[f"{prefix}/__none__"] = True
+    else:
+        flat[prefix] = tree
+    return flat
+
+
+def save(path: str, step: int, params, opt_state=None,
+         extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+              if hasattr(v, "shape")}
+    meta = {k: v for k, v in flat.items() if not hasattr(v, "shape")}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "meta": meta,
+        "arrays": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like) -> tuple[int, Any]:
+    """Restore into the structure of ``like`` (a pytree template, e.g.
+    freshly-initialised params or {'params':..., 'opt_state':...}).
+    Returns (step, tree)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    # structural restore: walk `like`, pull arrays by path
+    def rebuild(node, prefix):
+        if isinstance(node, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            return type(node)(*[rebuild(v, f"{prefix}/{f}")
+                                for f, v in zip(node._fields, node)])
+        if isinstance(node, (tuple, list)):
+            return type(node)(rebuild(v, f"{prefix}/{i}")
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        if prefix not in data:
+            raise KeyError(f"checkpoint missing array {prefix!r}")
+        arr = data[prefix]
+        want = tuple(node.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"checkpoint shape mismatch at {prefix!r}: "
+                f"{arr.shape} vs {want}")
+        return jax.numpy.asarray(arr).astype(node.dtype)
+
+    return manifest["step"], rebuild(like, "")

@@ -1,0 +1,84 @@
+"""AdamW in pure JAX (no optax dependency): decoupled weight decay, global
+grad-norm clipping, linear-warmup + cosine schedule.  Optimiser state dtype
+follows the canonical mixed-precision recipe: f32 moments regardless of
+parameter dtype."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init_state(params) -> AdamWState:
+    f32 = lambda t: jnp.zeros(t.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(f32, params),
+                      nu=jax.tree.map(f32, params))
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads,
+                  state: AdamWState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    step = state.step + 1
+    b1, b2 = cfg.betas
+    lr = schedule(cfg, state.step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), \
+        {"grad_norm": gnorm, "lr": lr}

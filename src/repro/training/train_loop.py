@@ -1,0 +1,65 @@
+"""Training driver: data pipeline -> jit'd train step -> metrics +
+checkpoints.  Used by examples/train_small.py on CPU and by
+launch/train.py on a mesh."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.launch.partition import make_train_step
+from repro.models import transformer as T
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 = only final
+    ckpt_dir: str = ""
+    seed: int = 0
+    dtype: str = "float32"
+    adamw: opt.AdamWConfig = dataclasses.field(
+        default_factory=lambda: opt.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                                total_steps=200))
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          log: Callable[[str], None] = print) -> dict:
+    dtype = jnp.dtype(tcfg.dtype)
+    params = T.init_params(cfg, jax.random.PRNGKey(tcfg.seed), dtype)
+    opt_state = opt.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, tcfg.adamw))
+
+    data = Prefetcher(iter(SyntheticLM(cfg, tcfg.batch, tcfg.seq_len,
+                                       seed=tcfg.seed)))
+    losses = []
+    t0 = time.time()
+    for step in range(tcfg.steps):
+        batch = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            log(f"step {step:5d} loss {loss:.4f} "
+                f"ce {float(metrics['ce']):.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"({(time.time() - t0):.1f}s)")
+        if tcfg.ckpt_every and tcfg.ckpt_dir \
+                and step and step % tcfg.ckpt_every == 0:
+            ckpt.save(tcfg.ckpt_dir, step, params, opt_state)
+    data.close()
+    if tcfg.ckpt_dir:
+        ckpt.save(tcfg.ckpt_dir, tcfg.steps, params, opt_state)
+    return {"losses": losses, "params": params, "opt_state": opt_state,
+            "wall_s": time.time() - t0}

@@ -1,0 +1,197 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned architecture runs one forward pass + one grad step + (for decoder
+archs) prefill->decode consistency, on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs
+from repro.models import transformer as T
+
+ARCHS = sorted(all_configs().keys())
+DTYPE = jnp.float32   # CPU smoke: f32 keeps numerics clean
+
+
+def _smoke_batch(cfg, key, B=2, S=16):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.frontend == "audio":
+        batch["prefix_embeds"] = jax.random.normal(
+            ks[0], (B, S, cfg.d_model), DTYPE) * 0.02
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0,
+                                             cfg.vocab_size)
+    elif cfg.frontend == "vision":
+        P = 4
+        batch["prefix_embeds"] = jax.random.normal(
+            ks[0], (B, P, cfg.d_model), DTYPE) * 0.02
+        batch["tokens"] = jax.random.randint(ks[1], (B, S - P), 0,
+                                             cfg.vocab_size)
+        batch["labels"] = jax.random.randint(ks[2], (B, S - P), 0,
+                                             cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0,
+                                             cfg.vocab_size)
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0,
+                                             cfg.vocab_size)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke_models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = all_configs()[arch].reduced()
+            params = T.init_params(cfg, jax.random.PRNGKey(0), DTYPE)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = all_configs()[arch].reduced()
+    assert cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch, smoke_models):
+    cfg, params = smoke_models(arch)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1))
+    logits, _, aux = jax.jit(
+        lambda p, b: T.forward(cfg, p, b, mode="train"))(params, batch)
+    n_tok = 16
+    assert logits.shape == (2, n_tok, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_grad_step(arch, smoke_models):
+    """One SGD step decreases nothing NaN-wise and produces finite grads for
+    every parameter leaf."""
+    cfg, params = smoke_models(arch)
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(2))
+
+    def loss(p):
+        l, _ = T.loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert bool(jnp.isfinite(val)), f"{arch}: loss {val}"
+    flat, _ = jax.tree.flatten(grads)
+    for g in flat:
+        assert bool(jnp.isfinite(g).all()), f"{arch}: non-finite grad"
+    # loss should be near log(V) at init (uniform predictions)
+    assert float(val) < np.log(cfg.padded_vocab) + 2.0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not all_configs()[a].is_encoder])
+def test_prefill_then_decode_matches_full_forward(arch, smoke_models):
+    """Teacher-forced decode after prefill must reproduce the full-sequence
+    forward logits (the cache/state machinery is exact, not approximate).
+
+    MoE archs: capacity drops depend on the token count per dispatch, so
+    exact equality only holds drop-free -- raise the capacity factor."""
+    import dataclasses
+    cfg, params = smoke_models(arch)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    full_logits, _, _ = T.forward(cfg, params, {"tokens": toks},
+                                  mode="train")
+
+    n_pre = S // 2
+    cache = T.init_cache(cfg, B, max_len=S, dtype=DTYPE)
+    pre_logits, cache, _ = T.forward(cfg, params,
+                                     {"tokens": toks[:, :n_pre]},
+                                     mode="prefill", cache=cache)
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(full_logits[:, :n_pre]),
+                               rtol=2e-3, atol=2e-3)
+    logits_steps = []
+    for t in range(n_pre, S):
+        step_logits, cache = T.decode_step(cfg, params, toks[:, t:t + 1],
+                                           cache)
+        logits_steps.append(step_logits)
+    dec = jnp.concatenate(logits_steps, axis=1)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(full_logits[:, n_pre:]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "phi3-mini-3.8b"])
+def test_sliding_window_decode_consistency(arch, smoke_models):
+    """The long-context sliding-window variant: ring-buffer decode equals a
+    full-cache run that applies the same window mask."""
+    import dataclasses
+    cfg0, _ = smoke_models(arch)
+    cfg = dataclasses.replace(cfg0, sliding_window=6)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), DTYPE)
+    B, S = 1, 14
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                              cfg.vocab_size)
+    # reference: full forward with window mask applied in-sequence
+    ref_logits, _, _ = T.forward(cfg, params, {"tokens": toks}, mode="train")
+    # ring buffer of exactly window size
+    cache = T.init_cache(cfg, B, max_len=S, dtype=DTYPE)
+    assert cache.kv.k.shape[2] == 6  # (layers, B, M, kv, hd) -> M == window
+    logits = []
+    for t in range(S):
+        lg, cache = T.decode_step(cfg, params, toks[:, t:t + 1], cache)
+        logits.append(lg)
+    dec = jnp.concatenate(logits, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity factor 1.25 and uniform-ish routing, the fraction of
+    dropped (token, expert) assignments should be small."""
+    from repro.models import layers as L
+    cfg = all_configs()["granite-moe-3b-a800m"].reduced()
+    params = L.init_moe_params(cfg, jax.random.PRNGKey(0), DTYPE)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model),
+                          DTYPE) * 0.5
+    y, aux = L.moe(cfg, params, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # aux loss ~ 1 for balanced routing (E * sum(me*ce) with me=ce=1/E)
+    assert 0.5 < float(aux) < 4.0
+
+
+def test_moe_matches_dense_reference():
+    """Sort-based dispatch == brute-force per-token expert evaluation
+    (modulo capacity drops; use high capacity so nothing drops)."""
+    import dataclasses
+    from repro.models import layers as L
+    cfg = dataclasses.replace(
+        all_configs()["granite-moe-3b-a800m"].reduced(),
+        moe_capacity_factor=8.0)
+    params = L.init_moe_params(cfg, jax.random.PRNGKey(0), DTYPE)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          DTYPE) * 0.5
+    y, _ = L.moe(cfg, params, x)
+
+    # dense reference
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / gate.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(cfg.num_experts):
+        h = jax.nn.silu(xt @ params["wg"][e]) * (xt @ params["wu"][e])
+        ye = h @ params["wd"][e]
+        w = jnp.where(eidx == e, gate, 0.0).sum(-1)
+        ref = ref + ye * w[:, None].astype(ye.dtype)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)

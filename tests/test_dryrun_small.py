@@ -1,0 +1,89 @@
+"""Dry-run pipeline integration test on a small host-device mesh: exercises
+param/batch/cache structs, lowering, compile, cost extraction and the
+loop-cost extrapolation for one arch of each loop depth.  Subprocess with 8
+devices; the production 512-device sweep runs via launch/dryrun.py."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax
+    from repro.configs import all_configs
+    from repro.configs.base import InputShape
+    from repro.launch import dryrun as DR
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ok = []
+    for arch, seq in [("@A1@", 64), ("@A2@", 64), ("@A3@", 64)]:
+        cfg0 = all_configs()[arch]
+        cfg = dataclasses.replace(
+            cfg0.reduced(), num_layers=4,
+            attn_every=2 if cfg0.attn_every else 0, name=arch)
+        shape = InputShape("t", seq, 8, "@MODE@")
+        rec = DR.lower_cell(cfg, shape, mesh, "test-mesh")
+        assert rec["cost"]["flops"] > 0
+        assert rec["model_flops"] > 0
+        # extrapolated totals exceed the raw scan-undercounted totals
+        assert rec["cost"]["flops"] >= rec["cost_scan_raw"]["flops"] * 0.99
+        ok.append(arch)
+    print("DRYRUN_OK", ok)
+""")
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("mode", ["train", "decode"])
+def test_dryrun_cells_small_mesh(mode):
+    """depth-1 (attn), depth-2 (rwkv), depth-3 (zamba) archs through the
+    full lower/compile/extrapolate pipeline."""
+    script = SCRIPT.replace("@A1@", "qwen3-4b") \
+        .replace("@A2@", "rwkv6-7b").replace("@A3@", "zamba2-7b") \
+        .replace("@MODE@", mode)
+    out = _run(script)
+    assert "DRYRUN_OK" in out
+
+
+def test_extrapolation_exactness_linear():
+    """On a depth-1 arch the extrapolation must reproduce the true FLOPs of
+    an unrolled model exactly: compile L=6 unrolled as ground truth and
+    compare with extrapolation from L=2/L=4."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import jax
+        from repro.configs import all_configs
+        from repro.configs.base import InputShape
+        from repro.launch import dryrun as DR
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = dataclasses.replace(all_configs()["phi3-mini-3.8b"].reduced(),
+                                  num_layers=6, name="exact-test")
+        shape = InputShape("t", 64, 8, "train")
+        # ground truth: fully unrolled 6-layer model, no loops at all
+        truth = DR._measure(cfg, shape, mesh, unroll_layers=True,
+                            scan_unroll=1)["flops"]
+        rec = DR.lower_cell(cfg, shape, mesh, "test-mesh")
+        err = abs(rec["cost"]["flops"] - truth) / truth
+        assert err < 0.02, (rec["cost"]["flops"], truth)
+        print("EXACT_OK", err)
+    """)
+    out = _run(script)
+    assert "EXACT_OK" in out

@@ -1,0 +1,106 @@
+"""Transformer cost profiles + planner property tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import all_configs
+from repro.core import (PAPER_ENV_J6, TPU_EDGE_CLOUD, evaluate_objectives,
+                        feasible_mask, smartsplit_exhaustive)
+from repro.core.costs import LayerProfile, ModelProfile, check_profile
+from repro.models.profiles import transformer_profile
+
+DECODERS = [a for a, c in all_configs().items() if not c.is_encoder]
+
+
+@pytest.mark.parametrize("arch", sorted(all_configs()))
+def test_transformer_profile_wellformed(arch):
+    cfg = all_configs()[arch]
+    for mode in ("prefill", "decode"):
+        if cfg.is_encoder and mode == "decode":
+            continue
+        p = transformer_profile(cfg, seq_len=4096, batch=4, mode=mode)
+        check_profile(p)
+        assert p.num_layers == cfg.num_layers
+        # recurrent archs carry state across the boundary
+        if cfg.pattern in ("rwkv", "mamba"):
+            assert any(l.state_bytes > 0 for l in p.layers)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "kimi-k2-1t-a32b"])
+def test_profile_flops_match_config_totals(arch):
+    """Sum of per-block profile FLOPs ~= cfg.model_flops (inference)."""
+    cfg = all_configs()[arch]
+    p = transformer_profile(cfg, seq_len=2048, batch=2, mode="prefill")
+    total = sum(l.flops for l in p.layers)
+    model = cfg.model_flops(seq_len=2048, batch=2, mode="prefill")
+    # profile includes attention-score FLOPs, model_flops is 2*N*D;
+    # they must agree within the attention-quadratic margin
+    assert total == pytest.approx(model, rel=0.35)
+
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_tpu_split_plan_valid(arch):
+    cfg = all_configs()[arch]
+    p = transformer_profile(cfg, seq_len=8192, batch=8, mode="prefill")
+    plan = smartsplit_exhaustive(p, TPU_EDGE_CLOUD)
+    assert 1 <= plan.split_index <= cfg.num_layers - 1
+    F = evaluate_objectives(p, TPU_EDGE_CLOUD)
+    # the plan's objectives must be consistent with the cost matrix
+    np.testing.assert_allclose(np.asarray(plan.objectives),
+                               F[plan.split_index], rtol=1e-9)
+
+
+def test_rwkv_boundary_is_state_dominated_late():
+    """The O(1)-state property: for RWKV the boundary payload does not
+    grow with split depth (unlike CNN activations)."""
+    cfg = all_configs()["rwkv6-7b"]
+    p = transformer_profile(cfg, seq_len=32768, batch=1, mode="decode")
+    b = p.boundary()
+    assert np.allclose(b[1:-1], b[1], rtol=1e-6)  # constant interior
+
+
+# ---------------------------------------------------------------------------
+# Random-profile planner properties
+# ---------------------------------------------------------------------------
+@st.composite
+def profiles(draw):
+    L = draw(st.integers(3, 25))
+    layers = []
+    for i in range(L):
+        layers.append(LayerProfile(
+            name=f"l{i}", kind="x",
+            flops=draw(st.floats(1e6, 1e12)),
+            param_bytes=draw(st.floats(0, 1e9)),
+            act_bytes=draw(st.floats(1e3, 1e8)),
+            boundary_bytes=draw(st.floats(1e3, 1e8)),
+            state_bytes=draw(st.floats(0, 1e6))))
+    return ModelProfile(name="rand", layers=tuple(layers), input_bytes=1e5)
+
+
+@given(profiles(), st.sampled_from(["full", "activations"]))
+@settings(max_examples=25, deadline=None)
+def test_planner_invariants_on_random_profiles(profile, f3):
+    plan = smartsplit_exhaustive(profile, PAPER_ENV_J6, f3_mode=f3)
+    L = profile.num_layers
+    assert 1 <= plan.split_index <= L - 1
+    F = evaluate_objectives(profile, PAPER_ENV_J6, f3)
+    # the chosen split is on the Pareto front of interior candidates
+    ours = F[plan.split_index]
+    for l1 in range(1, L):
+        other = F[l1]
+        assert not (np.all(other <= ours) and np.any(other < ours))
+
+
+@given(profiles())
+@settings(max_examples=15, deadline=None)
+def test_cost_model_monotonicity(profile):
+    """Structural invariants of the cost model."""
+    F = evaluate_objectives(profile, PAPER_ENV_J6)
+    # memory strictly non-decreasing in l1
+    assert np.all(np.diff(F[:, 2]) >= -1e-9)
+    # all objectives finite and non-negative
+    assert np.all(np.isfinite(F)) and np.all(F >= 0)
+    feas = feasible_mask(profile, PAPER_ENV_J6)
+    assert not feas[0] and not feas[-1]   # degenerate ends excluded

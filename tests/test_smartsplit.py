@@ -1,0 +1,152 @@
+"""End-to-end tests of the SmartSplit planner on the paper's models and the
+paper's hardware environment -- the reproduction claims live here."""
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_ENV_J6, PAPER_ENV_NOTE8, TPU_EDGE_CLOUD,
+                        coc, cos, ebo, evaluate_objectives, feasible_mask,
+                        lbo, mbo, rs, smartsplit, smartsplit_exhaustive,
+                        total_energy, total_latency)
+from repro.core.costs import check_profile
+from repro.core.nsga2 import NSGA2Config
+from repro.models.profiles import cnn_profile
+
+MODELS = ["alexnet", "vgg11", "vgg13", "vgg16", "mobilenetv2"]
+PAPER_TABLE1 = {"alexnet": 3, "vgg11": 11, "vgg13": 10, "vgg16": 10}
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_profiles_valid(name):
+    check_profile(cnn_profile(name))
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_ga_matches_exhaustive(name):
+    """NSGA-II + TOPSIS == enumeration + TOPSIS on every paper model."""
+    p = cnn_profile(name)
+    for f3 in ("full", "activations"):
+        ga = smartsplit(p, PAPER_ENV_J6, f3_mode=f3)
+        ex = smartsplit_exhaustive(p, PAPER_ENV_J6, f3_mode=f3)
+        assert ga.split_index == ex.split_index
+        assert set(ga.pareto_indices) == set(ex.pareto_indices)
+
+
+def test_table1_calibrated_reproduction():
+    """Table I: optimal split layers 3/11/10/10. Under the table-calibrated
+    memory counting (see DESIGN.md §9 / EXPERIMENTS.md Calibration) we
+    reproduce AlexNet, VGG13 and VGG16 exactly; VGG11 selects 6 with the
+    paper's 11 present in the Pareto set."""
+    got = {m: smartsplit_exhaustive(cnn_profile(m), PAPER_ENV_J6,
+                                    f3_mode="activations")
+           for m in PAPER_TABLE1}
+    assert got["alexnet"].split_index == 3
+    assert got["vgg13"].split_index == 10
+    assert got["vgg16"].split_index == 10
+    assert 11 in got["vgg11"].pareto_indices
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_paper_split_in_pareto_set(name):
+    """Every Table-I split the paper reports is Pareto-optimal under our
+    cost model too (both memory countings)."""
+    if name not in PAPER_TABLE1:
+        pytest.skip("not in Table I")
+    p = cnn_profile(name)
+    plan = smartsplit_exhaustive(p, PAPER_ENV_J6)
+    assert PAPER_TABLE1[name] in plan.pareto_indices
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_split_constraints(name):
+    p = cnn_profile(name)
+    for hw in (PAPER_ENV_J6, PAPER_ENV_NOTE8, TPU_EDGE_CLOUD):
+        plan = smartsplit(p, hw)
+        assert 1 <= plan.split_index <= p.num_layers - 1
+        assert plan.client_layers + plan.server_layers == p.num_layers
+        # memory constraint
+        F = evaluate_objectives(p, hw)
+        assert F[plan.split_index, 2] <= hw.client.memory_budget
+
+
+def test_memory_budget_constraint_binds():
+    """Shrink the client budget and the planner must move the split earlier."""
+    import dataclasses
+    p = cnn_profile("vgg16")
+    free = smartsplit_exhaustive(p, PAPER_ENV_J6)
+    mem_at_free = evaluate_objectives(p, PAPER_ENV_J6)[free.split_index, 2]
+    tight_client = dataclasses.replace(PAPER_ENV_J6.client,
+                                       memory_budget=mem_at_free * 0.5)
+    tight = dataclasses.replace(PAPER_ENV_J6, client=tight_client)
+    plan = smartsplit_exhaustive(p, tight)
+    F = evaluate_objectives(p, tight)
+    assert F[plan.split_index, 2] <= tight_client.memory_budget
+    assert plan.split_index < free.split_index
+
+
+def test_baselines_order():
+    """LBO minimises f1, EBO f2, MBO f3 among feasible interior splits;
+    COS/COC are the degenerate ends."""
+    p = cnn_profile("vgg16")
+    hw = PAPER_ENV_J6
+    F = evaluate_objectives(p, hw)
+    feas = feasible_mask(p, hw)
+    l_lbo, l_ebo, l_mbo = lbo(p, hw), ebo(p, hw), mbo(p, hw)
+    interior = np.where(feas)[0]
+    assert F[l_lbo, 0] == F[interior, 0].min()
+    assert F[l_ebo, 1] == F[interior, 1].min()
+    assert F[l_mbo, 2] == F[interior, 2].min()
+    assert cos(p, hw) == p.num_layers
+    assert coc(p, hw) == 0
+    r = rs(p, hw, np.random.default_rng(0))
+    assert 1 <= r <= p.num_layers - 1
+
+
+def test_smartsplit_dominates_or_ties_single_objective_baselines():
+    """SmartSplit's pick cannot be dominated by LBO's or EBO's pick (it is
+    on the Pareto front)."""
+    for name in MODELS:
+        p = cnn_profile(name)
+        hw = PAPER_ENV_J6
+        F = evaluate_objectives(p, hw)
+        plan = smartsplit_exhaustive(p, hw)
+        ours = F[plan.split_index]
+        for other in (lbo(p, hw), ebo(p, hw)):
+            o = F[other]
+            assert not (np.all(o <= ours) and np.any(o < ours)), \
+                f"{name}: dominated by split {other}"
+
+
+def test_upload_latency_dominates_at_early_split():
+    """Pilot-study claim: upload latency is the primary contributor for
+    early splits on 10 Mbps (paper Figs 1-2)."""
+    from repro.core import latency_terms
+    p = cnn_profile("vgg16")
+    t_c, t_u, t_s, _ = latency_terms(p, PAPER_ENV_J6)
+    # at the first conv output (224x224x64 fp32 ~ 12.8 MB over 1.25 MB/s)
+    assert t_u[1] > t_c[1] and t_u[1] > t_s[1]
+    assert t_u[1] > 5.0
+
+
+def test_note8_less_upload_energy_share():
+    """Paper Fig 3-5: the J6 (802.11n) spends relatively more energy on
+    upload than on compute vs the Note 8's faster CPU -- with identical
+    radio constants, the faster client lowers the client-energy share."""
+    from repro.core import energy_terms
+    p = cnn_profile("vgg16")
+    e_c_j6, e_u_j6, _ = energy_terms(p, PAPER_ENV_J6)
+    e_c_n8, e_u_n8, _ = energy_terms(p, PAPER_ENV_NOTE8)
+    mid = p.num_layers // 2
+    assert e_u_j6[mid] == pytest.approx(e_u_n8[mid])  # same radio model
+    # client energy grows with nu^3/(C*S) ~ nu^2: Note 8 (2.0 GHz) burns
+    # MORE compute energy than J6 (1.6 GHz) -- the paper's Fig 4 contrast.
+    assert e_c_n8[mid] > e_c_j6[mid]
+
+
+def test_total_latency_energy_positive_and_finite():
+    for name in MODELS:
+        p = cnn_profile(name)
+        for hw in (PAPER_ENV_J6, TPU_EDGE_CLOUD):
+            assert np.all(np.isfinite(total_latency(p, hw)))
+            assert np.all(total_latency(p, hw) >= 0)
+            assert np.all(np.isfinite(total_energy(p, hw)))
+            assert np.all(total_energy(p, hw) >= 0)

@@ -1,0 +1,61 @@
+"""SmartSplit two-stage executor: split-across-pods == monolithic forward.
+
+Needs >1 jax device, so it runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count (the parent test session
+must keep seeing exactly 1 CPU device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import all_configs
+    from repro.launch.smartsplit_exec import two_stage_apply
+    from repro.models import transformer as T
+
+    cfg = dataclasses.replace(all_configs()["{arch}"].reduced(),
+                              num_layers=4, name="split-test")
+    if cfg.num_experts:
+        # microbatching changes per-dispatch token counts; drop-free
+        # capacity keeps split == monolithic exact (real MoE capacity
+        # semantics -- documented in DESIGN.md section 9)
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    mono, _, _ = T.forward(cfg, params, {{"tokens": toks}}, mode="train")
+    mesh = jax.make_mesh((2,), ("pod",))
+    for l1 in (1, 2, 3):
+        split = two_stage_apply(cfg, params, toks, mesh, l1)
+        np.testing.assert_allclose(np.asarray(split), np.asarray(mono),
+                                   rtol=2e-3, atol=2e-3)
+    piped = two_stage_apply(cfg, params, toks, mesh, 2, pipelined=True,
+                            microbatches=2)
+    np.testing.assert_allclose(np.asarray(piped), np.asarray(mono),
+                               rtol=2e-3, atol=2e-3)
+    print("TWO_STAGE_OK {arch}")
+""")
+
+
+def _run(arch: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT.format(arch=arch)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))), timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "rwkv6-7b",
+                                  "granite-moe-3b-a800m"])
+def test_two_stage_equals_monolithic(arch):
+    assert f"TWO_STAGE_OK {arch}" in _run(arch)
