@@ -3,12 +3,15 @@ numbers only; on TPU pass REPRO_PALLAS_COMPILE=1) plus the analytic MXU
 utilisation each BlockSpec tiling would claim on v5e."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_us
 from repro.core.hardware import V5E_PEAK_FLOPS_BF16
 from repro.kernels import ops, ref
+from repro.kernels.conv2d import plan_conv
 
 
 def run_all() -> list[tuple]:
@@ -48,6 +51,50 @@ def run_all() -> list[tuple]:
     jconv = jax.jit(lambda a, b: ref.conv2d_ref(a, b, stride=1, pad=2))
     us = time_us(lambda: jax.block_until_ready(jconv(x, w)), repeats=3)
     rows.append(("kernels.conv2d_ref.alexnet_conv2", us, "xla_conv"))
+
+    # fused conv+bias+relu: one tiled-kernel launch where the seed path
+    # needed three ops (conv kernel, XLA bias broadcast, XLA relu)
+    bias = jax.random.normal(jax.random.fold_in(key, 12), (192,)) * 0.1
+    us = time_us(lambda: jax.block_until_ready(
+        ops.conv2d(x, w, stride=1, pad=2, bias=bias, activation="relu")),
+        repeats=3)
+    rows.append(("kernels.conv2d_fused.alexnet_conv2", us,
+                 "1_launch_vs_seed_3_ops"))
+    jseed = jax.jit(lambda a, b, c: jax.nn.relu(
+        ref.conv2d_ref(a, b, stride=1, pad=2) + c[None, :, None, None]))
+    us = time_us(lambda: jax.block_until_ready(jseed(x, w, bias)), repeats=3)
+    rows.append(("kernels.conv2d_unfused3.alexnet_conv2", us,
+                 "xla_conv+bias+relu"))
+
+    # the VMEM-busting shapes the seed kernel (whole-image staging) could
+    # not hold in a 16 MB core: VGG16 conv1-conv3 + MobileNetV2 dw convs
+    conv_shapes = [  # name, cin, hw, cout, K, stride, pad, groups
+        ("vgg16_conv1", 3, 224, 64, 3, 1, 1, 1),
+        ("vgg16_conv2", 64, 224, 64, 3, 1, 1, 1),
+        ("vgg16_conv3", 64, 112, 128, 3, 1, 1, 1),
+        ("mbv2_dw_s2_96", 96, 112, 96, 3, 2, 1, 96),
+        ("mbv2_dw_s1_384", 384, 14, 384, 3, 1, 1, 384),
+    ]
+    for name, cin, hw, cout, K, s, p, g in conv_shapes:
+        xc = jax.random.normal(key, (1, cin, hw, hw), jnp.float32) * 0.3
+        wc = jax.random.normal(jax.random.fold_in(key, 13),
+                               (cout, cin // g, K, K), jnp.float32) * 0.1
+        bc = jax.random.normal(jax.random.fold_in(key, 14),
+                               (cout,), jnp.float32) * 0.1
+        plan = plan_conv(xc.shape, wc.shape, stride=s, pad=p, groups=g)
+        us = time_us(lambda: jax.block_until_ready(
+            ops.conv2d(xc, wc, stride=s, pad=p, bias=bc,
+                       activation="relu", groups=g)), repeats=3)
+        h_out = (hw + 2 * p - K) // s + 1
+        flops = 2 * K * K * (cin // g) * cout * h_out * h_out
+        rows.append((f"kernels.conv2d_tiled.{name}", us,
+                     f"tile_h={plan.tile_h} vmem_bytes={plan.vmem_bytes} "
+                     f"analytic_v5e_us="
+                     f"{flops / V5E_PEAK_FLOPS_BF16 * 1e6:.2f}"))
+        jc = jax.jit(functools.partial(ref.conv2d_ref, stride=s, pad=p,
+                                       bias=bc, activation="relu", groups=g))
+        us = time_us(lambda: jax.block_until_ready(jc(xc, wc)), repeats=3)
+        rows.append((f"kernels.conv2d_ref.{name}", us, "xla_conv"))
 
     # rwkv6 wkv: 64 tokens x 2 heads
     b, t, h, hd2 = 1, 64, 2, 64

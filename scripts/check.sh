@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification -- the exact command ROADMAP.md documents.
+# Run from the repo root: scripts/check.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"

@@ -68,3 +68,12 @@ def collective_counts(hlo_text: str) -> dict[str, int]:
 def count_op(hlo_text: str, opname: str) -> int:
     """Count occurrences of a given HLO op (e.g. 'fusion', 'transpose')."""
     return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))
+
+
+def cost_analysis_dict(compiled) -> dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a plain dict on newer jax and a
+    per-partition list of dicts on older releases -- normalise to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

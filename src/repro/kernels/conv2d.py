@@ -1,13 +1,48 @@
-"""Direct convolution as a Pallas TPU kernel.
+"""Spatially-tiled direct convolution as a Pallas TPU kernel.
 
 The paper's compute hot-spot is CNN convolution on the client device.  The
 TPU-native formulation: a KxK conv is K^2 shifted (Cout x Cin) @ (Cin x HW)
 matmuls -- pure MXU work with the image tile resident in VMEM, instead of a
-GPU-style im2col gather.  Grid: (batch, cout_blocks); weights for the block
-and the whole (padded) input image tile live in VMEM; the K^2 loop is
-unrolled (K is a static hyper-parameter)."""
+GPU-style im2col gather.
+
+Grid: ``(batch, cout_blocks, h_blocks)``.  Each grid step stages
+
+  * a *row tile* of the padded input -- ``tile_in_h = (tile_h-1)*stride + K``
+    rows, i.e. the ``tile_h`` output rows it produces plus the K-1 halo rows
+    shared with the neighbouring tiles (expressed with
+    ``pl.BlockSpec(..., indexing_mode=pl.unblocked)`` so consecutive input
+    blocks may overlap),
+  * one ``block_co``-channel slice of the weights, and
+  * the fp32 accumulator / output tile.
+
+VMEM budget model
+-----------------
+Per grid step the kernel holds (``B = dtype bytes``; Pallas double-buffers
+every streamed block for the HBM->VMEM pipeline, hence the factor 2):
+
+    2 * [ cin_block * tile_in_h * W_in * B      (input row tile)
+        + block_co * cin_per_group * K^2 * B    (weight slice)
+        + block_co * 4                          (bias column, fp32)
+        + block_co * tile_h * W_out * B ]       (output tile)
+    +   block_co * tile_h * W_out * 4           (fp32 accumulator)
+
+``choose_tile_h`` picks the largest ``tile_h`` whose estimate fits the
+budget (default 12 MiB, leaving headroom inside a v5e core's ~16 MiB VMEM
+for Mosaic scratch), then shrinks it to ``ceil(h_out / n_blocks)`` so the
+final grid wastes as few padded rows as possible.  ``h_out`` need not be a
+multiple of ``tile_h``: the wrapper zero-pads input rows so the remainder
+tile reads in-bounds and slices the padded output rows away.
+
+The epilogue (bias add + relu/relu6) runs on the fp32 accumulator before
+writeback, so a paper-layer conv+bias+relu pair is one kernel launch.
+Grouped convolution (``feature_group_count``) is supported: pointwise
+(groups=1), group-aligned channel blocks (1 < groups < Cin), and the
+depthwise case (cin_per_group == 1) which runs an elementwise VPU path
+instead of degenerate 1-deep matmuls.
+"""
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -15,57 +50,199 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024     # one v5e core
+DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024  # headroom for Mosaic scratch
 
-def _conv_kernel(x_ref, w_ref, o_ref, *, K: int, stride: int,
-                 h_out: int, w_out: int):
-    x = x_ref[0].astype(jnp.float32)              # (Cin, Hp, Wp)
-    wts = w_ref[...].astype(jnp.float32)          # (block_co, Cin, K, K)
+
+def conv_vmem_bytes(*, cin_block: int, block_co: int, tile_h: int,
+                    w_in: int, w_out: int, K: int, stride: int,
+                    cin_per_group: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes one grid step of the tiled kernel occupies."""
+    tile_in_h = (tile_h - 1) * stride + K
+    x_b = cin_block * tile_in_h * w_in * dtype_bytes
+    w_b = block_co * cin_per_group * K * K * dtype_bytes
+    b_b = block_co * 4
+    o_b = block_co * tile_h * w_out * dtype_bytes
+    acc = block_co * tile_h * w_out * 4
+    return 2 * (x_b + w_b + b_b + o_b) + acc
+
+
+def choose_tile_h(h_out: int, *, cin_block: int, block_co: int, w_in: int,
+                  w_out: int, K: int, stride: int, cin_per_group: int,
+                  dtype_bytes: int = 4,
+                  budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Largest output-row tile whose VMEM estimate fits ``budget``, shrunk
+    to the smallest tile with the same block count (minimal padded waste)."""
+    if h_out < 1:
+        raise ValueError(f"invalid conv geometry: h_out={h_out} "
+                         f"(kernel/stride larger than padded input)")
+    est = functools.partial(
+        conv_vmem_bytes, cin_block=cin_block, block_co=block_co,
+        w_in=w_in, w_out=w_out, K=K, stride=stride,
+        cin_per_group=cin_per_group, dtype_bytes=dtype_bytes)
+    tile_h = next((t for t in range(min(h_out, 512), 0, -1)
+                   if est(tile_h=t) <= budget), 0)
+    if tile_h == 0:
+        raise ValueError(
+            f"conv tile of a single output row exceeds VMEM budget "
+            f"({est(tile_h=1)} > {budget}); W-axis tiling not implemented")
+    n_blocks = -(-h_out // tile_h)
+    return -(-h_out // n_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Static tiling decision + derived geometry for one conv shape
+    (exposed for tests; ``conv2d`` consumes it so the BlockSpec geometry
+    and the VMEM estimate can never desynchronise)."""
+    block_co: int
+    cin_block: int
+    tile_h: int
+    tile_in_h: int
+    n_h_blocks: int
+    vmem_bytes: int
+    h_out: int
+    w_out: int
+    g_out: int          # output channels per group
+    depthwise: bool
+
+
+def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
+              pad: int = 0, groups: int = 1, block_co: int = 0,
+              tile_h: int = 0, dtype_bytes: int = 4,
+              vmem_budget: int = DEFAULT_VMEM_BUDGET) -> ConvPlan:
+    """Pick (block_co, tile_h) for the grid and estimate per-step VMEM."""
+    N, Cin, H, W = x_shape
+    Cout, cin_pg, K, _ = w_shape
+    if Cin != cin_pg * groups or Cout % groups:
+        raise ValueError(f"bad grouping: x Cin={Cin}, w Cin/g={cin_pg}, "
+                         f"groups={groups}, Cout={Cout}")
+    g_out = Cout // groups
+    depthwise = cin_pg == 1 and groups > 1
+    if depthwise and g_out != 1:
+        raise ValueError("depthwise with channel multiplier > 1 unsupported")
+    if not block_co:
+        # largest channel block <= 128 that divides the group structure
+        limit = Cout if groups == 1 or depthwise else g_out
+        block_co = next(b for b in range(min(limit, 128), 0, -1)
+                        if limit % b == 0)
+    if groups == 1 or depthwise:
+        if Cout % block_co:
+            raise ValueError(f"block_co={block_co} must divide Cout={Cout}")
+    elif g_out % block_co:
+        raise ValueError(f"block_co={block_co} must divide the per-group "
+                         f"output channels ({g_out}) when groups > 1")
+    cin_block = cin_pg * (block_co if depthwise else 1)
+    h_in, w_in = H + 2 * pad, W + 2 * pad
+    h_out = (h_in - K) // stride + 1
+    w_out = (w_in - K) // stride + 1
+    kw = dict(cin_block=cin_block, block_co=block_co, w_in=w_in,
+              w_out=w_out, K=K, stride=stride, cin_per_group=cin_pg,
+              dtype_bytes=dtype_bytes)
+    if not tile_h:
+        tile_h = choose_tile_h(h_out, budget=vmem_budget, **kw)
+    tile_h = min(tile_h, h_out)
+    return ConvPlan(
+        block_co=block_co, cin_block=cin_block, tile_h=tile_h,
+        tile_in_h=(tile_h - 1) * stride + K,
+        n_h_blocks=-(-h_out // tile_h),
+        vmem_bytes=conv_vmem_bytes(tile_h=tile_h, **kw),
+        h_out=h_out, w_out=w_out, g_out=g_out, depthwise=depthwise)
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
+                 tile_h: int, w_out: int, depthwise: bool,
+                 activation: str | None):
+    x = x_ref[0].astype(jnp.float32)           # (cin_block, tile_in_h, w_in)
+    wts = w_ref[...].astype(jnp.float32)       # (block_co, cin_pg, K, K)
     block_co = wts.shape[0]
     cin = x.shape[0]
-    acc = jnp.zeros((block_co, h_out * w_out), jnp.float32)
-    for kh in range(K):
-        for kw in range(K):
-            xs = jax.lax.slice(
-                x, (0, kh, kw),
-                (cin, kh + (h_out - 1) * stride + 1,
-                 kw + (w_out - 1) * stride + 1),
-                (1, stride, stride))              # (Cin, h_out, w_out)
-            xs = xs.reshape(cin, h_out * w_out)
-            wk = wts[:, :, kh, kw]                # (block_co, Cin)
-            acc += jax.lax.dot_general(
-                wk, xs, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-    o_ref[0] = acc.reshape(block_co, h_out, w_out).astype(o_ref.dtype)
+    if depthwise:
+        # channel-aligned elementwise path: output channel c reads input
+        # channel c of the staged block -- no MXU, pure VPU multiplies
+        acc = jnp.zeros((block_co, tile_h, w_out), jnp.float32)
+        for kh in range(K):
+            for kw in range(K):
+                xs = jax.lax.slice(
+                    x, (0, kh, kw),
+                    (cin, kh + (tile_h - 1) * stride + 1,
+                     kw + (w_out - 1) * stride + 1),
+                    (1, stride, stride))       # (block_co, tile_h, w_out)
+                acc += xs * wts[:, 0, kh, kw][:, None, None]
+        acc = acc.reshape(block_co, tile_h * w_out)
+    else:
+        acc = jnp.zeros((block_co, tile_h * w_out), jnp.float32)
+        for kh in range(K):
+            for kw in range(K):
+                xs = jax.lax.slice(
+                    x, (0, kh, kw),
+                    (cin, kh + (tile_h - 1) * stride + 1,
+                     kw + (w_out - 1) * stride + 1),
+                    (1, stride, stride))       # (cin, tile_h, w_out)
+                xs = xs.reshape(cin, tile_h * w_out)
+                wk = wts[:, :, kh, kw]         # (block_co, cin)
+                acc += jax.lax.dot_general(
+                    wk, xs, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...].astype(jnp.float32)  # (block_co, 1) broadcast
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "relu6":
+        acc = jnp.clip(acc, 0.0, 6.0)
+    o_ref[0] = acc.reshape(block_co, tile_h, w_out).astype(o_ref.dtype)
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
-           pad: int = 0, block_co: int = 0,
+           pad: int = 0, bias: jnp.ndarray | None = None,
+           activation: str | None = None, groups: int = 1,
+           block_co: int = 0, tile_h: int = 0,
+           vmem_budget: int = DEFAULT_VMEM_BUDGET,
            interpret: bool = True) -> jnp.ndarray:
-    """x: (N, Cin, H, W); w: (Cout, Cin, K, K) -> (N, Cout, Hout, Wout)."""
+    """x: (N, Cin, H, W); w: (Cout, Cin/groups, K, K) -> (N, Cout, Ho, Wo).
+
+    ``bias`` (Cout,) and ``activation`` in {None, "relu", "relu6"} fuse into
+    the kernel epilogue; ``groups`` follows lax ``feature_group_count``."""
+    if activation not in (None, "relu", "relu6"):
+        raise ValueError(f"unknown activation {activation!r}")
     N, Cin, H, W = x.shape
-    Cout, _, K, _ = w.shape
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
-        H, W = H + 2 * pad, W + 2 * pad
-    h_out = (H - K) // stride + 1
-    w_out = (W - K) // stride + 1
-    if not block_co:
-        block_co = next(b for b in range(min(Cout, 128), 0, -1)
-                        if Cout % b == 0)
-    assert Cout % block_co == 0
-    kernel = functools.partial(_conv_kernel, K=K, stride=stride,
-                               h_out=h_out, w_out=w_out)
-    return pl.pallas_call(
+    Cout, cin_pg, K, _ = w.shape
+    plan = plan_conv(x.shape, w.shape, stride=stride, pad=pad, groups=groups,
+                     block_co=block_co, tile_h=tile_h,
+                     dtype_bytes=x.dtype.itemsize, vmem_budget=vmem_budget)
+    block_co, tile_h = plan.block_co, plan.tile_h
+    h_out, w_out, g_out = plan.h_out, plan.w_out, plan.g_out
+    h_in, w_in = H + 2 * pad, W + 2 * pad
+    # pad rows so the remainder tile's halo read stays in-bounds
+    h_out_pad = plan.n_h_blocks * tile_h
+    rows_needed = (h_out_pad - 1) * stride + K
+    x = jnp.pad(x, ((0, 0), (0, 0),
+                    (pad, pad + max(0, rows_needed - h_in)), (pad, pad)))
+    if bias is None:
+        bias = jnp.zeros((Cout,), jnp.float32)
+    bias2d = bias.reshape(Cout, 1).astype(jnp.float32)
+
+    kernel = functools.partial(
+        _conv_kernel, K=K, stride=stride, tile_h=tile_h, w_out=w_out,
+        depthwise=plan.depthwise, activation=activation)
+    out = pl.pallas_call(
         kernel,
-        grid=(N, Cout // block_co),
+        grid=(N, Cout // block_co, plan.n_h_blocks),
         in_specs=[
-            pl.BlockSpec((1, Cin, H, W), lambda n, c: (n, 0, 0, 0)),
-            pl.BlockSpec((block_co, Cin, K, K), lambda n, c: (c, 0, 0, 0)),
+            # overlapping (haloed) row tiles: element offsets, not block ids
+            pl.BlockSpec(
+                (1, plan.cin_block, plan.tile_in_h, w_in),
+                lambda n, c, h: (n, c * block_co // g_out * cin_pg,
+                                 h * tile_h * stride, 0),
+                indexing_mode=pl.unblocked),
+            pl.BlockSpec((block_co, cin_pg, K, K),
+                         lambda n, c, h: (c, 0, 0, 0)),
+            pl.BlockSpec((block_co, 1), lambda n, c, h: (c, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_co, h_out, w_out),
-                               lambda n, c: (n, c, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, Cout, h_out, w_out), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel")),
+        out_specs=pl.BlockSpec((1, block_co, tile_h, w_out),
+                               lambda n, c, h: (n, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Cout, h_out_pad, w_out), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
-    )(x, w)
+    )(x, w, bias2d)
+    return out[:, :, :h_out, :] if h_out_pad != h_out else out

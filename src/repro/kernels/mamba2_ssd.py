@@ -80,7 +80,7 @@ def mamba2_ssd(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
         out_specs=sx,
         out_shape=jax.ShapeDtypeStruct((Bb, T, H, hp), x.dtype),
         scratch_shapes=[pltpu.VMEM((hp, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, la, B, C)

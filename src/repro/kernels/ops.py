@@ -53,9 +53,18 @@ def flash_attention_gqa(q, k, v, *, causal: bool = True,
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "pad"))
-def conv2d(x, w, *, stride: int = 1, pad: int = 0):
-    return _conv.conv2d(x, w, stride=stride, pad=pad, interpret=INTERPRET)
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "pad", "activation", "groups"))
+def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
+           activation: str | None = None, groups: int = 1):
+    """Fused conv(+bias)(+relu/relu6): one spatially-tiled kernel launch.
+
+    ``bias`` (Cout,) and ``activation`` run in the kernel epilogue on the
+    fp32 accumulator; ``groups`` is lax's ``feature_group_count`` (set to
+    Cin for depthwise)."""
+    return _conv.conv2d(x, w, stride=stride, pad=pad, bias=bias,
+                        activation=activation, groups=groups,
+                        interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t",))

@@ -25,12 +25,25 @@ def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
     return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0):
-    """x: (N, Cin, H, W); w: (Cout, Cin, K, K). Direct lax conv."""
-    return jax.lax.conv_general_dilated(
+def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0, bias=None,
+               activation: str | None = None, groups: int = 1):
+    """x: (N, Cin, H, W); w: (Cout, Cin/groups, K, K). Direct lax conv,
+    optionally grouped (``feature_group_count``) with the same fused
+    epilogue the Pallas kernel offers (bias + relu/relu6)."""
+    y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride),
         padding=[(pad, pad), (pad, pad)],
-        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups)
+    if bias is not None:
+        y = y + bias[None, :, None, None].astype(y.dtype)
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "relu6":
+        y = jnp.clip(y, 0.0, 6.0)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
 
 
 def rwkv6_wkv_ref(r, k, v, w, u, s0=None):

@@ -59,7 +59,7 @@ def rwkv6_wkv(r, k, v, w, u, *, block_t: int = 64,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((B, T, H, hd), r.dtype),
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

@@ -26,7 +26,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.hlo import collective_bytes, collective_counts
+from repro.analysis.hlo import (collective_bytes, collective_counts,
+                                cost_analysis_dict)
 from repro.configs import INPUT_SHAPES, all_configs, shape_skips
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch import partition as PT
@@ -89,7 +90,7 @@ def _measure(cfg: ModelConfig, shape: InputShape, mesh, *,
         Lmod.HINT_AXIS = None
         Lmod.HINT_MESH = None
         moe_ep.EP_MESH = None
-    cost = dict(compiled.cost_analysis())
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     ma = compiled.memory_analysis()
     return {

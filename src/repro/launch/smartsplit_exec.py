@@ -28,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -121,11 +122,11 @@ def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
         return jnp.where(pod == 0, back, logits)
 
     pod_spec = jax.tree.map(lambda _: P("pod"), {"x": 0})["x"]
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P("pod"), P("pod"), P(), P(), P(), P()),
         out_specs=P(),
-        check_vma=False)
+        check_rep=False)
     return fn
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from functools import partial
 from typing import Any
 
@@ -23,6 +24,23 @@ import jax.numpy as jnp
 import numpy as np
 
 DTYPE_BYTES = 4  # fp32
+
+CONV_BACKENDS = ("xla", "pallas")
+
+
+def conv_backend(backend: str | None = None) -> str:
+    """Resolve the conv execution backend.
+
+    ``xla`` (default) keeps the seed's bit-exact ``lax.conv_general_dilated``
+    path; ``pallas`` routes conv(+bias)(+relu/relu6) pairs through the fused
+    spatially-tiled kernel in ``repro.kernels.conv2d``.  Overridable per
+    call, else by env ``REPRO_CONV_BACKEND``."""
+    b = backend or os.environ.get("REPRO_CONV_BACKEND", "xla")
+    if b not in CONV_BACKENDS:
+        source = "backend argument" if backend else "REPRO_CONV_BACKEND"
+        raise ValueError(f"{source} must be one of {CONV_BACKENDS}, "
+                         f"got {b!r}")
+    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,19 +214,21 @@ def init_layer(key, layer: Layer, in_shape: tuple) -> Any:
     return {}
 
 
-def _conv2d(x, w, b, stride, pad, groups=1):
-    y = jax.lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride),
-        padding=[(pad, pad), (pad, pad)],
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-        feature_group_count=groups)
-    return y + b[None, :, None, None]
+def _conv2d(x, w, b, stride, pad, groups=1, activation=None, backend=None):
+    if conv_backend(backend) == "pallas":
+        from repro.kernels import ops
+        return ops.conv2d(x, w, stride=stride, pad=pad, bias=b,
+                          activation=activation, groups=groups)
+    from repro.kernels import ref
+    return ref.conv2d_ref(x, w, stride=stride, pad=pad, bias=b,
+                          activation=activation, groups=groups)
 
 
 def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
-                train: bool = False) -> jnp.ndarray:
+                train: bool = False, backend: str | None = None) -> jnp.ndarray:
     if layer.kind == "conv":
-        return _conv2d(x, params["w"], params["b"], layer.stride, layer.pad)
+        return _conv2d(x, params["w"], params["b"], layer.stride, layer.pad,
+                       backend=backend)
     if layer.kind == "relu":
         return jax.nn.relu(x)
     if layer.kind == "relu6":
@@ -237,15 +257,16 @@ def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
             x = x.mean(axis=(2, 3))
         return x @ params["w"] + params["b"]
     if layer.kind == "invres":
+        # conv+relu6 pairs fuse into one kernel launch on the pallas backend
         y = x
         hidden_in = x
         if "expand" in params:
-            y = _conv2d(y, params["expand"]["w"], params["expand"]["b"], 1, 0)
-            y = jnp.clip(y, 0.0, 6.0)
+            y = _conv2d(y, params["expand"]["w"], params["expand"]["b"], 1, 0,
+                        activation="relu6", backend=backend)
         y = _conv2d(y, params["dw"]["w"], params["dw"]["b"], layer.stride, 1,
-                    groups=y.shape[1])
-        y = jnp.clip(y, 0.0, 6.0)
-        y = _conv2d(y, params["project"]["w"], params["project"]["b"], 1, 0)
+                    groups=y.shape[1], activation="relu6", backend=backend)
+        y = _conv2d(y, params["project"]["w"], params["project"]["b"], 1, 0,
+                    backend=backend)
         if layer.stride == 1 and hidden_in.shape == y.shape:
             y = y + hidden_in
         return y
@@ -347,18 +368,37 @@ def init_cnn(key, layers: list[Layer], in_shape: tuple = INPUT_SHAPE):
 
 
 def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
-              stop: int | None = None):
-    """Run layers [start, stop) -- the split runtime building block."""
+              stop: int | None = None, backend: str | None = None):
+    """Run layers [start, stop) -- the split runtime building block.
+
+    On the pallas backend the walk peeks one layer ahead: a conv paper-layer
+    immediately followed by relu/relu6 collapses into a single fused kernel
+    launch (conv + bias + activation in the epilogue).  Both layers are
+    still *counted* -- split indices keep paper-layer semantics -- the pair
+    just executes as one launch when wholly on one side of the split."""
     stop = len(layers) if stop is None else stop
-    for i in range(start, stop):
-        x = apply_layer(layers[i], params[i], x)
+    bk = conv_backend(backend)
+    i = start
+    while i < stop:
+        layer = layers[i]
+        if (bk == "pallas" and layer.kind == "conv" and i + 1 < stop
+                and layers[i + 1].kind in ("relu", "relu6")):
+            x = _conv2d(x, params[i]["w"], params[i]["b"], layer.stride,
+                        layer.pad, activation=layers[i + 1].kind, backend=bk)
+            i += 2
+            continue
+        x = apply_layer(layer, params[i], x, backend=bk)
+        i += 1
     return x
 
 
-def apply_split(layers: list[Layer], params, x, split_index: int):
+def apply_split(layers: list[Layer], params, x, split_index: int,
+                backend: str | None = None):
     """Client runs [0, l1), payload crosses the link, server runs [l1, L).
 
     Returns (logits, boundary_payload) so callers can account the transfer."""
-    boundary = apply_cnn(layers, params, x, start=0, stop=split_index)
-    logits = apply_cnn(layers, params, boundary, start=split_index)
+    boundary = apply_cnn(layers, params, x, start=0, stop=split_index,
+                         backend=backend)
+    logits = apply_cnn(layers, params, boundary, start=split_index,
+                       backend=backend)
     return logits, boundary

@@ -22,6 +22,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import ModelConfig
 
@@ -181,11 +182,11 @@ def moe_expert_parallel(cfg: ModelConfig, p, x: jnp.ndarray):
             else jax.lax.pmean(aux, EP_AXIS)
         return y.reshape(Bl, S, d), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P(EP_AXIS, None, None), P(EP_AXIS, None, None),
                   P(EP_AXIS, None, None)),
         out_specs=(P(bspec, None, None), P()),
-        check_vma=False)
+        check_rep=False)
     return fn(x, p["router"], p["wg"], p["wu"], p["wd"])

@@ -26,7 +26,12 @@ def test_param_counts_match_published(name):
     assert params_m == pytest.approx(PUBLISHED_PARAMS_M[name], rel=0.02)
 
 
-@pytest.mark.parametrize("name", ["alexnet", "mobilenetv2"])
+@pytest.mark.parametrize("name", [
+    "alexnet",
+    # mobilenetv2 at 224 costs ~20 s of XLA compiles; tier-1 keeps the
+    # alexnet variant, full runs cover both
+    pytest.param("mobilenetv2", marks=pytest.mark.slow),
+])
 def test_split_execution_equivalent_to_monolithic(name):
     """Running client[0,l1) + server[l1,L) must equal the unsplit network
     bit-for-bit, at every split index (subsampled for speed)."""
@@ -77,6 +82,7 @@ def test_analytic_flops_match_hlo_alexnet():
     fn = jax.jit(lambda x: cnn.apply_cnn(layers, params, x))
     comp = fn.lower(jax.ShapeDtypeStruct((1, 3, 224, 224),
                                          jnp.float32)).compile()
-    hlo_flops = comp.cost_analysis()["flops"]
+    from repro.analysis.hlo import cost_analysis_dict
+    hlo_flops = cost_analysis_dict(comp)["flops"]
     ours = sum(l.flops for l in cnn_profile("alexnet").layers)
     assert hlo_flops == pytest.approx(ours, rel=0.2)

@@ -49,7 +49,12 @@ def _run(script: str) -> str:
     return out.stdout
 
 
-@pytest.mark.parametrize("mode", ["train", "decode"])
+@pytest.mark.parametrize("mode", [
+    # the train cell compiles backward passes for 3 archs (~2 min on CPU);
+    # decode exercises the same lower/extrapolate pipeline in ~20 s
+    pytest.param("train", marks=pytest.mark.slow),
+    "decode",
+])
 def test_dryrun_cells_small_mesh(mode):
     """depth-1 (attn), depth-2 (rwkv), depth-3 (zamba) archs through the
     full lower/compile/extrapolate pipeline."""
@@ -60,6 +65,7 @@ def test_dryrun_cells_small_mesh(mode):
     assert "DRYRUN_OK" in out
 
 
+@pytest.mark.slow
 def test_extrapolation_exactness_linear():
     """On a depth-1 arch the extrapolation must reproduce the true FLOPs of
     an unrolled model exactly: compile L=6 unrolled as ground truth and

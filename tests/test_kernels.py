@@ -26,10 +26,16 @@ def _tol(dtype):
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("bh,sq,sk,hd,causal,bq,bk", [
     (2, 128, 128, 64, True, 64, 64),
-    (1, 256, 256, 128, True, 128, 128),
+    (1, 128, 128, 128, True, 128, 128),   # full-tile blocks, MXU head dim
     (2, 128, 256, 64, False, 64, 64),     # cross-attention style
-    (1, 64, 384, 32, True, 64, 128),      # decode-ish: fewer q than k
-    (3, 192, 192, 80, True, 64, 64),      # non-128 head dim (phi3's 96 kin)
+    (1, 64, 256, 32, True, 64, 128),      # decode-ish: fewer q than k
+    (2, 128, 128, 80, True, 64, 64),      # non-128 head dim (phi3's 96 kin)
+    # original oversized variants: multi-q-block at hd=128, deeper decode
+    # k-span, and non-power-of-two extents -- slow, not deleted
+    pytest.param(1, 256, 256, 128, True, 128, 128,
+                 marks=pytest.mark.slow),
+    pytest.param(1, 64, 384, 32, True, 64, 128, marks=pytest.mark.slow),
+    pytest.param(3, 192, 192, 80, True, 64, 64, marks=pytest.mark.slow),
 ])
 def test_flash_attention_sweep(bh, sq, sk, hd, causal, bq, bk, dtype):
     q = (jax.random.normal(KEY, (bh, sq, hd)) * 0.3).astype(dtype)
@@ -69,7 +75,9 @@ def test_flash_attention_gqa_wrapper_matches_layer_attention():
 @pytest.mark.parametrize("n,cin,cout,hw,k,stride,pad", [
     (1, 3, 16, 32, 3, 1, 1),
     (2, 8, 32, 28, 5, 1, 2),
-    (1, 3, 64, 33, 11, 4, 2),     # AlexNet conv1 geometry
+    (1, 3, 64, 19, 11, 4, 2),     # AlexNet conv1 geometry (shrunk H/W:
+                                  # parity is shape-independent, K=11 is
+                                  # the expensive unrolled part)
     (2, 16, 16, 16, 1, 1, 0),     # pointwise
     (1, 4, 8, 20, 3, 2, 1),       # strided
 ])

@@ -1,10 +1,11 @@
-"""NSGA-II converges to known fronts; TOPSIS obeys its axioms."""
+"""NSGA-II converges to known fronts; TOPSIS obeys its axioms.
+
+Hypothesis property tests live in tests/test_nsga2_topsis_properties.py,
+which skips itself when ``hypothesis`` is not installed."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.nsga2 import NSGA2Config, nsga2
-from repro.core.pareto import exhaustive_pareto, pareto_front_mask
 from repro.core.topsis import column_normalise, topsis_select
 
 
@@ -12,36 +13,6 @@ def _eval_from_table(table):
     def evaluate(genomes):
         return table[genomes[:, 0]]
     return evaluate
-
-
-@given(st.integers(5, 60), st.integers(0, 5000))
-@settings(max_examples=25, deadline=None)
-def test_nsga2_recovers_exhaustive_front_1d(n, seed):
-    """Single-integer genome (the paper's case): with stratified init and
-    pop_size >= |domain| the offline-archive front is provably the exact
-    Pareto front (this is how `smartsplit` configures the GA)."""
-    rng = np.random.default_rng(seed)
-    table = rng.random((n, 3))
-    res = nsga2(_eval_from_table(table), np.array([0]), np.array([n - 1]),
-                NSGA2Config(pop_size=max(32, n), generations=30, seed=seed))
-    got = set(res.pareto_genomes[:, 0].tolist())
-    full_front = set(exhaustive_pareto(table).tolist())
-    assert got == full_front
-
-
-@given(st.integers(5, 60), st.integers(0, 5000))
-@settings(max_examples=15, deadline=None)
-def test_nsga2_underprovisioned_returns_nondominated_subset(n, seed):
-    """With pop < domain there is no exactness guarantee, but every
-    returned genome must still be non-dominated *among visited points*:
-    the archive front can never contain a point dominated by another
-    returned point."""
-    rng = np.random.default_rng(seed)
-    table = rng.random((n, 3))
-    res = nsga2(_eval_from_table(table), np.array([0]), np.array([n - 1]),
-                NSGA2Config(pop_size=8, generations=10, seed=seed))
-    F = res.pareto_F
-    assert np.all(pareto_front_mask(F))
 
 
 def test_nsga2_multigene_sphere():
@@ -91,28 +62,3 @@ def test_topsis_no_feasible_raises():
     F = np.ones((3, 3))
     with pytest.raises(ValueError):
         topsis_select(F, feasible=np.zeros(3, bool))
-
-
-@given(st.integers(2, 30), st.integers(0, 2000))
-@settings(max_examples=40, deadline=None)
-def test_topsis_scale_invariance(n, seed):
-    """Column normalisation makes the pick invariant to per-objective unit
-    changes (seconds vs ms, bytes vs MB) -- the property that justifies
-    mixing heterogeneous objectives."""
-    rng = np.random.default_rng(seed)
-    F = rng.random((n, 3)) + 0.01
-    scale = np.array([1e-3, 1e6, 123.0])
-    assert topsis_select(F) == topsis_select(F * scale)
-
-
-@given(st.integers(2, 20), st.integers(0, 2000))
-@settings(max_examples=40, deadline=None)
-def test_topsis_pick_is_pareto_when_input_is_front(n, seed):
-    rng = np.random.default_rng(seed)
-    F = rng.random((n, 3))
-    front = F[pareto_front_mask(F)]
-    pick = topsis_select(front)
-    assert 0 <= pick < front.shape[0]
-    # picked point is itself non-dominated within the front (trivially true
-    # for a front input; guards against index bugs after filtering)
-    assert pareto_front_mask(front)[pick]

@@ -1,16 +1,10 @@
-"""Property + unit tests for Pareto utilities (non-dominated sort, crowding)."""
+"""Unit tests for Pareto utilities (non-dominated sort, crowding).
+
+Hypothesis property tests live in tests/test_pareto_properties.py, which
+skips itself when ``hypothesis`` is not installed."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.pareto import (crowding_distance, dominates,
-                               exhaustive_pareto, non_dominated_sort,
-                               pareto_front_mask)
-
-
-def _random_F(draw_rows, m=3, seed=0):
-    rng = np.random.default_rng(seed)
-    return rng.random((draw_rows, m))
+from repro.core.pareto import dominates, pareto_front_mask
 
 
 def test_dominates_basic():
@@ -18,41 +12,6 @@ def test_dominates_basic():
     assert dominates(np.array([1.0, 2.0]), np.array([1.0, 3.0]))
     assert not dominates(np.array([1.0, 3.0]), np.array([2.0, 2.0]))
     assert not dominates(np.array([1.0, 1.0]), np.array([1.0, 1.0]))
-
-
-@given(st.integers(1, 40), st.integers(1, 4), st.integers(0, 10_000))
-@settings(max_examples=60, deadline=None)
-def test_front0_is_exactly_the_nondominated_set(n, m, seed):
-    rng = np.random.default_rng(seed)
-    F = rng.integers(0, 5, (n, m)).astype(float)  # ties are common
-    fronts = non_dominated_sort(F)
-    # Partition property: every index appears exactly once.
-    all_idx = np.sort(np.concatenate(fronts))
-    assert np.array_equal(all_idx, np.arange(n))
-    # Front 0 == brute-force Pareto set.
-    assert set(fronts[0].tolist()) == set(exhaustive_pareto(F).tolist())
-    # No point is dominated by a point in its own front or later fronts.
-    for k, front in enumerate(fronts):
-        later = np.concatenate(fronts[k:])
-        for i in front:
-            assert not any(dominates(F[j], F[i]) for j in later)
-    # Points in front k>0 are each dominated by someone in an earlier front.
-    for k in range(1, len(fronts)):
-        earlier = np.concatenate(fronts[:k])
-        for i in fronts[k]:
-            assert any(dominates(F[j], F[i]) for j in earlier)
-
-
-@given(st.integers(3, 30), st.integers(0, 1000))
-@settings(max_examples=30, deadline=None)
-def test_crowding_boundaries_infinite(n, seed):
-    rng = np.random.default_rng(seed)
-    F = rng.random((n, 3))
-    d = crowding_distance(F)
-    for j in range(3):
-        assert np.isinf(d[np.argmin(F[:, j])])
-        assert np.isinf(d[np.argmax(F[:, j])])
-    assert np.all(d[~np.isinf(d)] >= 0)
 
 
 def test_pareto_mask_monotone_memory_structure():

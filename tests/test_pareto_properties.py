@@ -1,0 +1,48 @@
+"""Hypothesis property tests for Pareto utilities.
+
+Kept separate from tests/test_pareto.py so environments without
+``hypothesis`` (it is a dev-only dependency, see requirements-dev.txt)
+still collect and run the unit tests there."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.pareto import (crowding_distance, dominates,  # noqa: E402
+                               exhaustive_pareto, non_dominated_sort)
+
+
+@given(st.integers(1, 40), st.integers(1, 4), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_front0_is_exactly_the_nondominated_set(n, m, seed):
+    rng = np.random.default_rng(seed)
+    F = rng.integers(0, 5, (n, m)).astype(float)  # ties are common
+    fronts = non_dominated_sort(F)
+    # Partition property: every index appears exactly once.
+    all_idx = np.sort(np.concatenate(fronts))
+    assert np.array_equal(all_idx, np.arange(n))
+    # Front 0 == brute-force Pareto set.
+    assert set(fronts[0].tolist()) == set(exhaustive_pareto(F).tolist())
+    # No point is dominated by a point in its own front or later fronts.
+    for k, front in enumerate(fronts):
+        later = np.concatenate(fronts[k:])
+        for i in front:
+            assert not any(dominates(F[j], F[i]) for j in later)
+    # Points in front k>0 are each dominated by someone in an earlier front.
+    for k in range(1, len(fronts)):
+        earlier = np.concatenate(fronts[:k])
+        for i in fronts[k]:
+            assert any(dominates(F[j], F[i]) for j in earlier)
+
+
+@given(st.integers(3, 30), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_crowding_boundaries_infinite(n, seed):
+    rng = np.random.default_rng(seed)
+    F = rng.random((n, 3))
+    d = crowding_distance(F)
+    for j in range(3):
+        assert np.isinf(d[np.argmin(F[:, j])])
+        assert np.isinf(d[np.argmax(F[:, j])])
+    assert np.all(d[~np.isinf(d)] >= 0)

@@ -1,0 +1,56 @@
+"""Hypothesis property tests for the planner on random profiles.
+
+Kept separate from tests/test_profiles_and_planner.py so environments
+without ``hypothesis`` (dev-only dependency) still run the unit and
+parametrized tests there."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (PAPER_ENV_J6, evaluate_objectives,  # noqa: E402
+                        feasible_mask, smartsplit_exhaustive)
+from repro.core.costs import LayerProfile, ModelProfile  # noqa: E402
+
+
+@st.composite
+def profiles(draw):
+    L = draw(st.integers(3, 25))
+    layers = []
+    for i in range(L):
+        layers.append(LayerProfile(
+            name=f"l{i}", kind="x",
+            flops=draw(st.floats(1e6, 1e12)),
+            param_bytes=draw(st.floats(0, 1e9)),
+            act_bytes=draw(st.floats(1e3, 1e8)),
+            boundary_bytes=draw(st.floats(1e3, 1e8)),
+            state_bytes=draw(st.floats(0, 1e6))))
+    return ModelProfile(name="rand", layers=tuple(layers), input_bytes=1e5)
+
+
+@given(profiles(), st.sampled_from(["full", "activations"]))
+@settings(max_examples=25, deadline=None)
+def test_planner_invariants_on_random_profiles(profile, f3):
+    plan = smartsplit_exhaustive(profile, PAPER_ENV_J6, f3_mode=f3)
+    L = profile.num_layers
+    assert 1 <= plan.split_index <= L - 1
+    F = evaluate_objectives(profile, PAPER_ENV_J6, f3)
+    # the chosen split is on the Pareto front of interior candidates
+    ours = F[plan.split_index]
+    for l1 in range(1, L):
+        other = F[l1]
+        assert not (np.all(other <= ours) and np.any(other < ours))
+
+
+@given(profiles())
+@settings(max_examples=15, deadline=None)
+def test_cost_model_monotonicity(profile):
+    """Structural invariants of the cost model."""
+    F = evaluate_objectives(profile, PAPER_ENV_J6)
+    # memory strictly non-decreasing in l1
+    assert np.all(np.diff(F[:, 2]) >= -1e-9)
+    # all objectives finite and non-negative
+    assert np.all(np.isfinite(F)) and np.all(F >= 0)
+    feas = feasible_mask(profile, PAPER_ENV_J6)
+    assert not feas[0] and not feas[-1]   # degenerate ends excluded

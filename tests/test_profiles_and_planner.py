@@ -1,14 +1,15 @@
-"""Transformer cost profiles + planner property tests."""
-import dataclasses
+"""Transformer cost profiles + planner tests.
 
+Hypothesis property tests on random profiles live in
+tests/test_planner_properties.py, which skips itself when ``hypothesis``
+is not installed."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import all_configs
-from repro.core import (PAPER_ENV_J6, TPU_EDGE_CLOUD, evaluate_objectives,
-                        feasible_mask, smartsplit_exhaustive)
-from repro.core.costs import LayerProfile, ModelProfile, check_profile
+from repro.core import (TPU_EDGE_CLOUD, evaluate_objectives,
+                        smartsplit_exhaustive)
+from repro.core.costs import check_profile
 from repro.models.profiles import transformer_profile
 
 DECODERS = [a for a, c in all_configs().items() if not c.is_encoder]
@@ -59,48 +60,3 @@ def test_rwkv_boundary_is_state_dominated_late():
     p = transformer_profile(cfg, seq_len=32768, batch=1, mode="decode")
     b = p.boundary()
     assert np.allclose(b[1:-1], b[1], rtol=1e-6)  # constant interior
-
-
-# ---------------------------------------------------------------------------
-# Random-profile planner properties
-# ---------------------------------------------------------------------------
-@st.composite
-def profiles(draw):
-    L = draw(st.integers(3, 25))
-    layers = []
-    for i in range(L):
-        layers.append(LayerProfile(
-            name=f"l{i}", kind="x",
-            flops=draw(st.floats(1e6, 1e12)),
-            param_bytes=draw(st.floats(0, 1e9)),
-            act_bytes=draw(st.floats(1e3, 1e8)),
-            boundary_bytes=draw(st.floats(1e3, 1e8)),
-            state_bytes=draw(st.floats(0, 1e6))))
-    return ModelProfile(name="rand", layers=tuple(layers), input_bytes=1e5)
-
-
-@given(profiles(), st.sampled_from(["full", "activations"]))
-@settings(max_examples=25, deadline=None)
-def test_planner_invariants_on_random_profiles(profile, f3):
-    plan = smartsplit_exhaustive(profile, PAPER_ENV_J6, f3_mode=f3)
-    L = profile.num_layers
-    assert 1 <= plan.split_index <= L - 1
-    F = evaluate_objectives(profile, PAPER_ENV_J6, f3)
-    # the chosen split is on the Pareto front of interior candidates
-    ours = F[plan.split_index]
-    for l1 in range(1, L):
-        other = F[l1]
-        assert not (np.all(other <= ours) and np.any(other < ours))
-
-
-@given(profiles())
-@settings(max_examples=15, deadline=None)
-def test_cost_model_monotonicity(profile):
-    """Structural invariants of the cost model."""
-    F = evaluate_objectives(profile, PAPER_ENV_J6)
-    # memory strictly non-decreasing in l1
-    assert np.all(np.diff(F[:, 2]) >= -1e-9)
-    # all objectives finite and non-negative
-    assert np.all(np.isfinite(F)) and np.all(F >= 0)
-    feas = feasible_mask(profile, PAPER_ENV_J6)
-    assert not feas[0] and not feas[-1]   # degenerate ends excluded
