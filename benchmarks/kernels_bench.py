@@ -8,10 +8,95 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_us
+from benchmarks.common import save_json, time_us
 from repro.core.hardware import V5E_PEAK_FLOPS_BF16
 from repro.kernels import ops, ref
 from repro.kernels.conv2d import plan_conv
+
+
+def _pool_triples(model: str) -> list[tuple]:
+    """(name, cin, hw, cout, K, stride, pad, act, pool_k, pool_s) for every
+    conv->relu->maxpool triple the model executes at 224 px (enumeration
+    shared with the fusion walk via cnn.conv_pool_triples)."""
+    from repro.models import cnn
+    layers = cnn.CNN_MODELS[model]
+    conv_ordinal = {i: n + 1 for n, i in enumerate(
+        i for i, l in enumerate(layers) if l.kind == "conv")}
+    return [(f"{model}_conv{conv_ordinal[i]}", cin, hw, cout, K, s, p,
+             act, pk, ps)
+            for i, cin, hw, cout, K, s, p, act, pk, ps
+            in cnn.conv_pool_triples(layers)]
+
+
+def conv_fusion_report() -> list[tuple]:
+    """Fused conv+relu+maxpool triple vs the unfused two-launch path for
+    every AlexNet/VGG16 pool triple: interpret-mode wall time (relative
+    only -- compile on TPU for real numbers), predicted per-tile VMEM, and
+    the analytic HBM-traffic proxy fusion removes (the conv activation
+    write + re-read).  Emits BENCH_conv_fusion.json so the perf trajectory
+    records launch counts and bandwidth proxies over time."""
+    rows, triples = [], []
+    key = jax.random.PRNGKey(42)
+    for model in ("alexnet", "vgg16"):
+        for name, cin, hw, cout, K, s, p, act, pk, ps in \
+                _pool_triples(model):
+            x = jax.random.normal(key, (1, cin, hw, hw), jnp.float32) * 0.3
+            w = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (cout, cin, K, K), jnp.float32) * 0.1
+            b = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (cout,), jnp.float32) * 0.1
+            plan = plan_conv(x.shape, w.shape, stride=s, pad=p,
+                             pool_k=pk, pool_s=ps)
+            us_f = time_us(lambda: jax.block_until_ready(
+                ops.conv2d(x, w, stride=s, pad=p, bias=b, activation=act,
+                           pool_k=pk, pool_s=ps)), repeats=3)
+            pool = jax.jit(lambda y: jax.lax.reduce_window(
+                y, -jnp.inf, jax.lax.max, (1, 1, pk, pk), (1, 1, ps, ps),
+                "VALID"))
+            us_u = time_us(lambda: jax.block_until_ready(pool(
+                ops.conv2d(x, w, stride=s, pad=p, bias=b,
+                           activation=act))), repeats=3)
+            jx = jax.jit(lambda a, c, d: pool(ref.conv2d_ref(
+                a, c, stride=s, pad=p, bias=d, activation=act)))
+            us_x = time_us(lambda: jax.block_until_ready(jx(x, w, b)),
+                           repeats=3)
+            # bandwidth proxy: the unfused path writes the conv activation
+            # to HBM and reads it back for the pool; fusion removes both
+            act_b = 4 * cout * plan.h_out * plan.w_out
+            pooled_b = 4 * cout * plan.p_out * plan.pw_out
+            in_b = 4 * cin * hw * hw
+            w_b = 4 * cout * cin * K * K
+            rows.append((
+                f"kernels.conv_fusion.{name}_pool{pk}s{ps}", us_f,
+                f"unfused_us={us_u:.1f} tile_h={plan.tile_h} "
+                f"vmem_bytes={plan.vmem_bytes} "
+                f"act_hbm_bytes_avoided={2 * act_b}"))
+            triples.append({
+                "name": name, "model": model,
+                "shape": {"cin": cin, "hw": hw, "cout": cout, "K": K,
+                          "stride": s, "pad": p, "pool_k": pk,
+                          "pool_s": ps},
+                "fused_us": us_f, "unfused_us": us_u, "xla_us": us_x,
+                "launches_fused": 1,          # one pallas_call, pool inside
+                "launches_unfused": 2,        # pallas_call + reduce_window
+                "ops_seed": 4,                # conv, bias, relu, pool
+                "tile_h": plan.tile_h, "tile_conv_h": plan.tile_conv_h,
+                "vmem_bytes": plan.vmem_bytes,
+                "hbm_bytes_fused": in_b + w_b + pooled_b,
+                "hbm_bytes_unfused": in_b + w_b + pooled_b + 2 * act_b,
+                "act_hbm_bytes_avoided": 2 * act_b,
+            })
+    path = save_json("", "BENCH_conv_fusion.json", {
+        "triples": triples,
+        "totals": {
+            "n_triples": len(triples),
+            "launches_fused": sum(t["launches_fused"] for t in triples),
+            "launches_unfused": sum(t["launches_unfused"] for t in triples),
+            "hbm_bytes_saved": sum(t["act_hbm_bytes_avoided"]
+                                   for t in triples),
+        }})
+    rows.append(("kernels.conv_fusion.json", None, path))
+    return rows
 
 
 def run_all() -> list[tuple]:
@@ -95,6 +180,9 @@ def run_all() -> list[tuple]:
                                        bias=bc, activation="relu", groups=g))
         us = time_us(lambda: jax.block_until_ready(jc(xc, wc)), repeats=3)
         rows.append((f"kernels.conv2d_ref.{name}", us, "xla_conv"))
+
+    # fused conv+relu+maxpool triples (AlexNet/VGG16) + BENCH_conv_fusion
+    rows += conv_fusion_report()
 
     # rwkv6 wkv: 64 tokens x 2 heads
     b, t, h, hd2 = 1, 64, 2, 64

@@ -7,9 +7,9 @@ GPU-style im2col gather.
 
 Grid: ``(batch, cout_blocks, h_blocks)``.  Each grid step stages
 
-  * a *row tile* of the padded input -- ``tile_in_h = (tile_h-1)*stride + K``
-    rows, i.e. the ``tile_h`` output rows it produces plus the K-1 halo rows
-    shared with the neighbouring tiles (expressed with
+  * a *row tile* of the padded input -- ``tile_in_h = (tile_conv_h-1)*stride
+    + K`` rows, i.e. the ``tile_conv_h`` conv rows it produces plus the K-1
+    halo rows shared with the neighbouring tiles (expressed with
     ``pl.BlockSpec(..., indexing_mode=pl.unblocked)`` so consecutive input
     blocks may overlap),
   * one ``block_co``-channel slice of the weights, and
@@ -18,13 +18,23 @@ Grid: ``(batch, cout_blocks, h_blocks)``.  Each grid step stages
 VMEM budget model
 -----------------
 Per grid step the kernel holds (``B = dtype bytes``; Pallas double-buffers
-every streamed block for the HBM->VMEM pipeline, hence the factor 2):
+every streamed block for the HBM->VMEM pipeline, hence the factor 2).
+Without a fused pool, ``tile_conv_h == tile_h`` and ``out_w == w_out``;
+with ``maxpool(pool_k, pool_s)`` fused, ``tile_h`` counts *pooled* output
+rows, so the accumulator spans ``tile_conv_h = (tile_h-1)*pool_s + pool_k``
+conv rows while the streamed output block shrinks to the pooled
+``tile_h x pw_out`` footprint (``pw_out = (w_out - pool_k)//pool_s + 1``):
 
-    2 * [ cin_block * tile_in_h * W_in * B      (input row tile)
-        + block_co * cin_per_group * K^2 * B    (weight slice)
-        + block_co * 4                          (bias column, fp32)
-        + block_co * tile_h * W_out * B ]       (output tile)
-    +   block_co * tile_h * W_out * 4           (fp32 accumulator)
+    2 * [ cin_block * tile_in_h * W_in * B        (input row tile)
+        + block_co * cin_per_group * K^2 * B      (weight slice)
+        + block_co * 4                            (bias column, fp32)
+        + block_co * tile_h * out_w * B ]         (pooled output tile)
+    +   block_co * tile_conv_h * W_out * 4        (fp32 conv accumulator)
+
+The pooled-epilogue term is why fusion *shrinks* the client-side memory
+footprint the paper optimises: the conv activation lives only as the fp32
+accumulator inside VMEM and is never written to HBM -- the kernel streams
+out the (pool_s^2-times smaller) pooled tile instead.
 
 ``choose_tile_h`` picks the largest ``tile_h`` whose estimate fits the
 budget (default 12 MiB, leaving headroom inside a v5e core's ~16 MiB VMEM
@@ -33,8 +43,9 @@ final grid wastes as few padded rows as possible.  ``h_out`` need not be a
 multiple of ``tile_h``: the wrapper zero-pads input rows so the remainder
 tile reads in-bounds and slices the padded output rows away.
 
-The epilogue (bias add + relu/relu6) runs on the fp32 accumulator before
-writeback, so a paper-layer conv+bias+relu pair is one kernel launch.
+The epilogue (bias add + relu/relu6 + optional maxpool) runs on the fp32
+accumulator before writeback, so a paper-layer conv+relu+maxpool *triple*
+is one kernel launch with no intermediate activation round-tripping HBM.
 Grouped convolution (``feature_group_count``) is supported: pointwise
 (groups=1), group-aligned channel blocks (1 < groups < Cin), and the
 depthwise case (cin_per_group == 1) which runs an elementwise VPU path
@@ -54,32 +65,53 @@ VMEM_LIMIT_BYTES = 16 * 1024 * 1024     # one v5e core
 DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024  # headroom for Mosaic scratch
 
 
+def _pool_out(n: int, pool_k: int, pool_s: int) -> int:
+    """VALID-window pooled extent (matches lax.reduce_window)."""
+    return (n - pool_k) // pool_s + 1
+
+
 def conv_vmem_bytes(*, cin_block: int, block_co: int, tile_h: int,
                     w_in: int, w_out: int, K: int, stride: int,
-                    cin_per_group: int, dtype_bytes: int = 4) -> int:
-    """Estimated VMEM bytes one grid step of the tiled kernel occupies."""
-    tile_in_h = (tile_h - 1) * stride + K
+                    cin_per_group: int, dtype_bytes: int = 4,
+                    pool_k: int = 0, pool_s: int = 1) -> int:
+    """Estimated VMEM bytes one grid step of the tiled kernel occupies.
+
+    With ``pool_k > 0`` (fused maxpool epilogue) ``tile_h`` counts pooled
+    output rows; the fp32 accumulator still spans the conv rows feeding
+    those pool windows."""
+    if pool_k:
+        tile_conv_h = (tile_h - 1) * pool_s + pool_k
+        out_w = _pool_out(w_out, pool_k, pool_s)
+    else:
+        tile_conv_h, out_w = tile_h, w_out
+    tile_in_h = (tile_conv_h - 1) * stride + K
     x_b = cin_block * tile_in_h * w_in * dtype_bytes
     w_b = block_co * cin_per_group * K * K * dtype_bytes
     b_b = block_co * 4
-    o_b = block_co * tile_h * w_out * dtype_bytes
-    acc = block_co * tile_h * w_out * 4
+    o_b = block_co * tile_h * out_w * dtype_bytes
+    acc = block_co * tile_conv_h * w_out * 4
     return 2 * (x_b + w_b + b_b + o_b) + acc
 
 
 def choose_tile_h(h_out: int, *, cin_block: int, block_co: int, w_in: int,
                   w_out: int, K: int, stride: int, cin_per_group: int,
-                  dtype_bytes: int = 4,
+                  dtype_bytes: int = 4, pool_k: int = 0, pool_s: int = 1,
                   budget: int = DEFAULT_VMEM_BUDGET) -> int:
     """Largest output-row tile whose VMEM estimate fits ``budget``, shrunk
-    to the smallest tile with the same block count (minimal padded waste)."""
+    to the smallest tile with the same block count (minimal padded waste).
+
+    ``h_out`` and the returned tile are in *kernel output rows*: conv rows
+    normally, pooled rows when a maxpool epilogue is fused (``pool_k > 0``)
+    -- tile boundaries then land on pool-window starts, i.e. ``tile_h`` is
+    aligned to the pool stride by construction."""
     if h_out < 1:
         raise ValueError(f"invalid conv geometry: h_out={h_out} "
                          f"(kernel/stride larger than padded input)")
     est = functools.partial(
         conv_vmem_bytes, cin_block=cin_block, block_co=block_co,
         w_in=w_in, w_out=w_out, K=K, stride=stride,
-        cin_per_group=cin_per_group, dtype_bytes=dtype_bytes)
+        cin_per_group=cin_per_group, dtype_bytes=dtype_bytes,
+        pool_k=pool_k, pool_s=pool_s)
     tile_h = next((t for t in range(min(h_out, 512), 0, -1)
                    if est(tile_h=t) <= budget), 0)
     if tile_h == 0:
@@ -94,7 +126,11 @@ def choose_tile_h(h_out: int, *, cin_block: int, block_co: int, w_in: int,
 class ConvPlan:
     """Static tiling decision + derived geometry for one conv shape
     (exposed for tests; ``conv2d`` consumes it so the BlockSpec geometry
-    and the VMEM estimate can never desynchronise)."""
+    and the VMEM estimate can never desynchronise).
+
+    With a fused maxpool epilogue (``pool_k > 0``) the kernel's output rows
+    are *pooled* rows: ``tile_h`` / ``n_h_blocks`` tile ``p_out``, and each
+    grid step internally computes ``tile_conv_h`` conv rows."""
     block_co: int
     cin_block: int
     tile_h: int
@@ -105,11 +141,17 @@ class ConvPlan:
     w_out: int
     g_out: int          # output channels per group
     depthwise: bool
+    pool_k: int = 0     # fused maxpool window (0 = no pool epilogue)
+    pool_s: int = 1     # fused maxpool stride
+    p_out: int = 0      # pooled output rows (== h_out when no pool)
+    pw_out: int = 0     # pooled output cols (== w_out when no pool)
+    tile_conv_h: int = 0  # conv rows computed per grid step
 
 
 def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
               pad: int = 0, groups: int = 1, block_co: int = 0,
               tile_h: int = 0, dtype_bytes: int = 4,
+              pool_k: int = 0, pool_s: int = 0,
               vmem_budget: int = DEFAULT_VMEM_BUDGET) -> ConvPlan:
     """Pick (block_co, tile_h) for the grid and estimate per-step VMEM."""
     N, Cin, H, W = x_shape
@@ -136,23 +178,41 @@ def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
     h_in, w_in = H + 2 * pad, W + 2 * pad
     h_out = (h_in - K) // stride + 1
     w_out = (w_in - K) // stride + 1
+    if pool_k:
+        pool_s = pool_s or pool_k
+        if pool_s < 1:
+            raise ValueError(f"pool_s={pool_s} must be >= 1")
+        p_out = _pool_out(h_out, pool_k, pool_s)
+        pw_out = _pool_out(w_out, pool_k, pool_s)
+        if h_out < 1 or p_out < 1 or pw_out < 1:
+            raise ValueError(
+                f"invalid fused conv+pool geometry: conv out "
+                f"{h_out}x{w_out}, pool(k={pool_k}, s={pool_s}) out "
+                f"{p_out}x{pw_out}")
+    else:
+        pool_s = 1
+        p_out, pw_out = h_out, w_out
     kw = dict(cin_block=cin_block, block_co=block_co, w_in=w_in,
               w_out=w_out, K=K, stride=stride, cin_per_group=cin_pg,
-              dtype_bytes=dtype_bytes)
+              dtype_bytes=dtype_bytes, pool_k=pool_k, pool_s=pool_s)
     if not tile_h:
-        tile_h = choose_tile_h(h_out, budget=vmem_budget, **kw)
-    tile_h = min(tile_h, h_out)
+        tile_h = choose_tile_h(p_out, budget=vmem_budget, **kw)
+    tile_h = min(tile_h, p_out)
+    tile_conv_h = (tile_h - 1) * pool_s + pool_k if pool_k else tile_h
     return ConvPlan(
         block_co=block_co, cin_block=cin_block, tile_h=tile_h,
-        tile_in_h=(tile_h - 1) * stride + K,
-        n_h_blocks=-(-h_out // tile_h),
+        tile_in_h=(tile_conv_h - 1) * stride + K,
+        n_h_blocks=-(-p_out // tile_h),
         vmem_bytes=conv_vmem_bytes(tile_h=tile_h, **kw),
-        h_out=h_out, w_out=w_out, g_out=g_out, depthwise=depthwise)
+        h_out=h_out, w_out=w_out, g_out=g_out, depthwise=depthwise,
+        pool_k=pool_k, pool_s=pool_s, p_out=p_out, pw_out=pw_out,
+        tile_conv_h=tile_conv_h)
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
-                 tile_h: int, w_out: int, depthwise: bool,
-                 activation: str | None):
+                 tile_h: int, tile_conv_h: int, w_out: int, pw_out: int,
+                 depthwise: bool, activation: str | None,
+                 pool_k: int, pool_s: int):
     x = x_ref[0].astype(jnp.float32)           # (cin_block, tile_in_h, w_in)
     wts = w_ref[...].astype(jnp.float32)       # (block_co, cin_pg, K, K)
     block_co = wts.shape[0]
@@ -160,26 +220,26 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
     if depthwise:
         # channel-aligned elementwise path: output channel c reads input
         # channel c of the staged block -- no MXU, pure VPU multiplies
-        acc = jnp.zeros((block_co, tile_h, w_out), jnp.float32)
+        acc = jnp.zeros((block_co, tile_conv_h, w_out), jnp.float32)
         for kh in range(K):
             for kw in range(K):
                 xs = jax.lax.slice(
                     x, (0, kh, kw),
-                    (cin, kh + (tile_h - 1) * stride + 1,
+                    (cin, kh + (tile_conv_h - 1) * stride + 1,
                      kw + (w_out - 1) * stride + 1),
-                    (1, stride, stride))       # (block_co, tile_h, w_out)
+                    (1, stride, stride))    # (block_co, tile_conv_h, w_out)
                 acc += xs * wts[:, 0, kh, kw][:, None, None]
-        acc = acc.reshape(block_co, tile_h * w_out)
+        acc = acc.reshape(block_co, tile_conv_h * w_out)
     else:
-        acc = jnp.zeros((block_co, tile_h * w_out), jnp.float32)
+        acc = jnp.zeros((block_co, tile_conv_h * w_out), jnp.float32)
         for kh in range(K):
             for kw in range(K):
                 xs = jax.lax.slice(
                     x, (0, kh, kw),
-                    (cin, kh + (tile_h - 1) * stride + 1,
+                    (cin, kh + (tile_conv_h - 1) * stride + 1,
                      kw + (w_out - 1) * stride + 1),
-                    (1, stride, stride))       # (cin, tile_h, w_out)
-                xs = xs.reshape(cin, tile_h * w_out)
+                    (1, stride, stride))       # (cin, tile_conv_h, w_out)
+                xs = xs.reshape(cin, tile_conv_h * w_out)
                 wk = wts[:, :, kh, kw]         # (block_co, cin)
                 acc += jax.lax.dot_general(
                     wk, xs, (((1,), (0,)), ((), ())),
@@ -189,41 +249,70 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
         acc = jnp.maximum(acc, 0.0)
     elif activation == "relu6":
         acc = jnp.clip(acc, 0.0, 6.0)
-    o_ref[0] = acc.reshape(block_co, tile_h, w_out).astype(o_ref.dtype)
+    acc = acc.reshape(block_co, tile_conv_h, w_out)
+    if pool_k:
+        # pooled epilogue: max over the pool_k x pool_k window, straight
+        # from the fp32 accumulator -- the conv rows never leave VMEM
+        pooled = None
+        for ph in range(pool_k):
+            for pw in range(pool_k):
+                s = jax.lax.slice(
+                    acc, (0, ph, pw),
+                    (block_co, ph + (tile_h - 1) * pool_s + 1,
+                     pw + (pw_out - 1) * pool_s + 1),
+                    (1, pool_s, pool_s))       # (block_co, tile_h, pw_out)
+                pooled = s if pooled is None else jnp.maximum(pooled, s)
+        acc = pooled
+    o_ref[0] = acc.astype(o_ref.dtype)
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
            pad: int = 0, bias: jnp.ndarray | None = None,
            activation: str | None = None, groups: int = 1,
+           pool_k: int = 0, pool_s: int = 0,
            block_co: int = 0, tile_h: int = 0,
            vmem_budget: int = DEFAULT_VMEM_BUDGET,
            interpret: bool = True) -> jnp.ndarray:
     """x: (N, Cin, H, W); w: (Cout, Cin/groups, K, K) -> (N, Cout, Ho, Wo).
 
     ``bias`` (Cout,) and ``activation`` in {None, "relu", "relu6"} fuse into
-    the kernel epilogue; ``groups`` follows lax ``feature_group_count``."""
+    the kernel epilogue; ``groups`` follows lax ``feature_group_count``.
+    ``pool_k > 0`` additionally fuses a VALID ``maxpool(pool_k, pool_s)``
+    (``pool_s`` defaults to ``pool_k``) after the activation, returning the
+    pooled (N, Cout, Po, Pw) tensor from the same launch."""
     if activation not in (None, "relu", "relu6"):
         raise ValueError(f"unknown activation {activation!r}")
     N, Cin, H, W = x.shape
     Cout, cin_pg, K, _ = w.shape
     plan = plan_conv(x.shape, w.shape, stride=stride, pad=pad, groups=groups,
                      block_co=block_co, tile_h=tile_h,
+                     pool_k=pool_k, pool_s=pool_s,
                      dtype_bytes=x.dtype.itemsize, vmem_budget=vmem_budget)
     block_co, tile_h = plan.block_co, plan.tile_h
-    h_out, w_out, g_out = plan.h_out, plan.w_out, plan.g_out
+    pool_k, pool_s = plan.pool_k, plan.pool_s
+    p_out, pw_out = plan.p_out, plan.pw_out
     h_in, w_in = H + 2 * pad, W + 2 * pad
-    # pad rows so the remainder tile's halo read stays in-bounds
-    h_out_pad = plan.n_h_blocks * tile_h
-    rows_needed = (h_out_pad - 1) * stride + K
+    # pad rows so the remainder tile's halo read stays in-bounds (the padded
+    # pooled rows, and the conv rows feeding only them, are sliced away)
+    p_out_pad = plan.n_h_blocks * tile_h
+    conv_rows = ((p_out_pad - 1) * pool_s + pool_k) if pool_k \
+        else p_out_pad
+    rows_needed = (conv_rows - 1) * stride + K
     x = jnp.pad(x, ((0, 0), (0, 0),
                     (pad, pad + max(0, rows_needed - h_in)), (pad, pad)))
     if bias is None:
         bias = jnp.zeros((Cout,), jnp.float32)
     bias2d = bias.reshape(Cout, 1).astype(jnp.float32)
 
+    g_out = plan.g_out
+    # consecutive tiles advance by tile_h kernel-output rows, i.e.
+    # tile_h * pool_s conv rows, i.e. tile_h * pool_s * stride input rows
+    row_step = tile_h * pool_s * stride
     kernel = functools.partial(
-        _conv_kernel, K=K, stride=stride, tile_h=tile_h, w_out=w_out,
-        depthwise=plan.depthwise, activation=activation)
+        _conv_kernel, K=K, stride=stride, tile_h=tile_h,
+        tile_conv_h=plan.tile_conv_h, w_out=plan.w_out, pw_out=pw_out,
+        depthwise=plan.depthwise, activation=activation,
+        pool_k=pool_k, pool_s=pool_s)
     out = pl.pallas_call(
         kernel,
         grid=(N, Cout // block_co, plan.n_h_blocks),
@@ -232,17 +321,18 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
             pl.BlockSpec(
                 (1, plan.cin_block, plan.tile_in_h, w_in),
                 lambda n, c, h: (n, c * block_co // g_out * cin_pg,
-                                 h * tile_h * stride, 0),
+                                 h * row_step, 0),
                 indexing_mode=pl.unblocked),
             pl.BlockSpec((block_co, cin_pg, K, K),
                          lambda n, c, h: (c, 0, 0, 0)),
             pl.BlockSpec((block_co, 1), lambda n, c, h: (c, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_co, tile_h, w_out),
+        out_specs=pl.BlockSpec((1, block_co, tile_h, pw_out),
                                lambda n, c, h: (n, c, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, Cout, h_out_pad, w_out), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((N, Cout, p_out_pad, pw_out),
+                                       x.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(x, w, bias2d)
-    return out[:, :, :h_out, :] if h_out_pad != h_out else out
+    return out[:, :, :p_out, :] if p_out_pad != p_out else out

@@ -1,9 +1,12 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles padding to block multiples, GQA head broadcasting, and the
-CPU-vs-TPU switch: ``interpret=True`` (the default here) executes the
-kernel bodies in Python on CPU for validation; on a real TPU runtime pass
-``interpret=False`` (or set REPRO_PALLAS_COMPILE=1) to compile via Mosaic.
+CPU-vs-TPU switch: ``interpret=True`` (the default) executes the kernel
+bodies in Python on CPU for validation; on a real TPU runtime set
+REPRO_PALLAS_COMPILE=1 to compile via Mosaic.  The env var is resolved at
+*call* time (mirroring ``models/cnn.py::conv_backend``) and threaded into
+the jit'd inner functions as a static argument, so flipping it after import
+-- or between calls -- retraces instead of silently reusing the old mode.
 """
 from __future__ import annotations
 
@@ -18,7 +21,12 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba2_ssd as _ssd
 from repro.kernels import rwkv6_wkv as _wkv
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def interpret_mode() -> bool:
+    """Resolve the Pallas execution mode from the environment *now*.
+
+    True (default) = interpret on CPU; REPRO_PALLAS_COMPILE=1 = Mosaic."""
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def _pad_to(x, axis, mult):
@@ -31,10 +39,9 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths), pad
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
-def flash_attention_gqa(q, k, v, *, causal: bool = True,
-                        block_q: int = 128, block_k: int = 128):
-    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0."""
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _flash_attention_gqa(q, k, v, *, causal, block_q, block_k, interpret):
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     g = H // KV
@@ -49,26 +56,45 @@ def flash_attention_gqa(q, k, v, *, causal: bool = True,
         (Sq, kf.shape[1], block_q, block_k)
     out = _fa.flash_attention(qf, kf, vf, causal=causal,
                               block_q=block_q, block_k=block_k,
-                              interpret=INTERPRET)
+                              interpret=interpret)
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
 
 
+def flash_attention_gqa(q, k, v, *, causal: bool = True,
+                        block_q: int = 128, block_k: int = 128):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0."""
+    return _flash_attention_gqa(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k, interpret=interpret_mode())
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "pad", "activation", "groups"))
+                   static_argnames=("stride", "pad", "activation", "groups",
+                                    "pool_k", "pool_s", "interpret"))
+def _conv2d(x, w, *, stride, pad, bias, activation, groups, pool_k, pool_s,
+            interpret):
+    return _conv.conv2d(x, w, stride=stride, pad=pad, bias=bias,
+                        activation=activation, groups=groups,
+                        pool_k=pool_k, pool_s=pool_s, interpret=interpret)
+
+
 def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
-           activation: str | None = None, groups: int = 1):
-    """Fused conv(+bias)(+relu/relu6): one spatially-tiled kernel launch.
+           activation: str | None = None, groups: int = 1,
+           pool_k: int = 0, pool_s: int = 0):
+    """Fused conv(+bias)(+relu/relu6)(+maxpool): one tiled kernel launch.
 
     ``bias`` (Cout,) and ``activation`` run in the kernel epilogue on the
     fp32 accumulator; ``groups`` is lax's ``feature_group_count`` (set to
-    Cin for depthwise)."""
-    return _conv.conv2d(x, w, stride=stride, pad=pad, bias=bias,
-                        activation=activation, groups=groups,
-                        interpret=INTERPRET)
+    Cin for depthwise).  ``pool_k > 0`` fuses a VALID
+    ``maxpool(pool_k, pool_s)`` after the activation so a paper-layer
+    conv->relu->maxpool triple is a single launch -- the conv activation
+    never round-trips HBM."""
+    return _conv2d(x, w, stride=stride, pad=pad, bias=bias,
+                   activation=activation, groups=groups,
+                   pool_k=pool_k, pool_s=pool_s, interpret=interpret_mode())
 
 
-@functools.partial(jax.jit, static_argnames=("block_t",))
-def rwkv6_wkv(r, k, v, w, u, *, block_t: int = 64):
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def _rwkv6_wkv(r, k, v, w, u, *, block_t, interpret):
     r2, p = _pad_to(r, 1, block_t)
     k2, _ = _pad_to(k, 1, block_t)
     v2, _ = _pad_to(v, 1, block_t)
@@ -77,17 +103,27 @@ def rwkv6_wkv(r, k, v, w, u, *, block_t: int = 64):
         # pad decay with ones (identity) so state evolution is unaffected
         w2 = w2.at[:, -p:].set(1.0)
     out = _wkv.rwkv6_wkv(r2, k2, v2, w2, u, block_t=block_t,
-                         interpret=INTERPRET)
+                         interpret=interpret)
     return out[:, :r.shape[1]]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def mamba2_ssd(x, dt, A, B, C, *, chunk: int = 64):
+def rwkv6_wkv(r, k, v, w, u, *, block_t: int = 64):
+    return _rwkv6_wkv(r, k, v, w, u, block_t=block_t,
+                      interpret=interpret_mode())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _mamba2_ssd(x, dt, A, B, C, *, chunk, interpret):
     T = x.shape[1]
     (x2, p) = _pad_to(x, 1, chunk)
     dt2, _ = _pad_to(dt, 1, chunk)
     B2, _ = _pad_to(B, 1, chunk)
     C2, _ = _pad_to(C, 1, chunk)
     out = _ssd.mamba2_ssd(x2, dt2, A, B2, C2, chunk=chunk,
-                          interpret=INTERPRET)
+                          interpret=interpret)
     return out[:, :T]
+
+
+def mamba2_ssd(x, dt, A, B, C, *, chunk: int = 64):
+    return _mamba2_ssd(x, dt, A, B, C, chunk=chunk,
+                       interpret=interpret_mode())

@@ -106,12 +106,25 @@ def _conv_out(h, k, s, p):
     return (h + 2 * p - k) // s + 1
 
 
+def _check_spatial(layer: Layer, in_shape: tuple, oh: int, ow: int) -> None:
+    """Reject degenerate geometry with a layer-naming error instead of an
+    opaque lax shape failure deep inside the conv/reduce_window lowering."""
+    if oh < 1 or ow < 1:
+        label = layer.name or layer.kind
+        raise ValueError(
+            f"layer {label!r} (ksize={layer.ksize}, stride={layer.stride}, "
+            f"pad={layer.pad}) produces empty output {oh}x{ow} from input "
+            f"(H, W)=({in_shape[1]}, {in_shape[2]}): input too small for "
+            f"this kernel/stride")
+
+
 def layer_out_shape(layer: Layer, in_shape: tuple) -> tuple:
     """in_shape: (C, H, W) or (F,) -- batch handled outside."""
     if layer.kind == "conv":
         c, h, w = in_shape
         oh = _conv_out(h, layer.ksize, layer.stride, layer.pad)
         ow = _conv_out(w, layer.ksize, layer.stride, layer.pad)
+        _check_spatial(layer, in_shape, oh, ow)
         return (layer.cout, oh, ow)
     if layer.kind in ("relu", "relu6", "dropout"):
         return in_shape
@@ -119,9 +132,15 @@ def layer_out_shape(layer: Layer, in_shape: tuple) -> tuple:
         c, h, w = in_shape
         oh = _conv_out(h, layer.ksize, layer.stride, 0)
         ow = _conv_out(w, layer.ksize, layer.stride, 0)
+        _check_spatial(layer, in_shape, oh, ow)
         return (c, oh, ow)
     if layer.kind == "avgpool":
-        c, _, _ = in_shape
+        c, h, w = in_shape
+        if layer.out_hw < 1 or h < 1 or w < 1:
+            raise ValueError(
+                f"layer {layer.name or layer.kind!r}: adaptive avgpool "
+                f"needs out_hw >= 1 and a non-empty input, got "
+                f"out_hw={layer.out_hw}, (H, W)=({h}, {w})")
         return (c, layer.out_hw, layer.out_hw)
     if layer.kind in ("linear", "gap_linear"):
         return (layer.features,)
@@ -214,18 +233,50 @@ def init_layer(key, layer: Layer, in_shape: tuple) -> Any:
     return {}
 
 
-def _conv2d(x, w, b, stride, pad, groups=1, activation=None, backend=None):
+def _maxpool(x, k, s):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, s, s), "VALID")
+
+
+def _conv2d(x, w, b, stride, pad, groups=1, activation=None,
+            pool_k=0, pool_s=0, backend=None):
+    """Backend-dispatched conv(+bias)(+act)(+maxpool).
+
+    On pallas the whole chain is one kernel launch; on xla the pool (if
+    any) runs as a separate reduce_window so both backends share the same
+    call signature and semantics."""
     if conv_backend(backend) == "pallas":
         from repro.kernels import ops
         return ops.conv2d(x, w, stride=stride, pad=pad, bias=b,
-                          activation=activation, groups=groups)
+                          activation=activation, groups=groups,
+                          pool_k=pool_k, pool_s=pool_s)
     from repro.kernels import ref
-    return ref.conv2d_ref(x, w, stride=stride, pad=pad, bias=b,
-                          activation=activation, groups=groups)
+    y = ref.conv2d_ref(x, w, stride=stride, pad=pad, bias=b,
+                       activation=activation, groups=groups)
+    return _maxpool(y, pool_k, pool_s or pool_k) if pool_k else y
+
+
+def _adaptive_avgpool_1d(x: jnp.ndarray, axis: int, out: int) -> jnp.ndarray:
+    """torchvision AdaptiveAvgPool semantics along one axis: output index i
+    averages input [floor(i*n/out), ceil((i+1)*n/out)) -- variable windows,
+    every input element covered (no truncation when ``n % out != 0``)."""
+    n = x.shape[axis]
+    if n % out == 0:                  # uniform windows: one cheap reshape
+        k = n // out
+        shape = x.shape[:axis] + (out, k) + x.shape[axis + 1:]
+        return x.reshape(shape).mean(axis=axis + 1)
+    pieces = []
+    for i in range(out):
+        s, e = (i * n) // out, -(-((i + 1) * n) // out)
+        pieces.append(jax.lax.slice_in_dim(x, s, e, axis=axis)
+                      .mean(axis=axis, keepdims=True))
+    return jnp.concatenate(pieces, axis=axis)
 
 
 def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
                 train: bool = False, backend: str | None = None) -> jnp.ndarray:
+    if layer.kind in ("conv", "maxpool", "avgpool"):
+        layer_out_shape(layer, x.shape[1:])   # fail with a named layer
     if layer.kind == "conv":
         return _conv2d(x, params["w"], params["b"], layer.stride, layer.pad,
                        backend=backend)
@@ -236,18 +287,13 @@ def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
     if layer.kind == "dropout":
         return x                      # inference: identity (paper: inference)
     if layer.kind == "maxpool":
-        return jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max,
-            (1, 1, layer.ksize, layer.ksize),
-            (1, 1, layer.stride, layer.stride), "VALID")
+        return _maxpool(x, layer.ksize, layer.stride)
     if layer.kind == "avgpool":
-        # Adaptive average pool to (out_hw, out_hw).
-        n, c, h, w = x.shape
-        t = layer.out_hw
-        kh, kw = h // t, w // t
-        x = x[:, :, :kh * t, :kw * t]
-        x = x.reshape(n, c, t, kh, t, kw)
-        return x.mean(axis=(3, 5))
+        # Adaptive average pool to (out_hw, out_hw), variable-window like
+        # torch's AdaptiveAvgPool2d (the old reshape path truncated
+        # trailing rows/cols whenever H % out_hw != 0, e.g. 227-px AlexNet)
+        x = _adaptive_avgpool_1d(x, 2, layer.out_hw)
+        return _adaptive_avgpool_1d(x, 3, layer.out_hw)
     if layer.kind == "linear":
         if x.ndim > 2:
             x = x.reshape(x.shape[0], -1)
@@ -357,6 +403,26 @@ def shapes_through(layers: list[Layer],
     return out
 
 
+def conv_pool_triples(layers: list[Layer],
+                      in_shape: tuple = INPUT_SHAPE) -> list[tuple]:
+    """(layer_index, cin, hw, cout, ksize, stride, pad, act, pool_k, pool_s)
+    for every conv->relu/relu6->maxpool triple ``apply_cnn`` fuses on the
+    pallas backend when wholly on one side of the split.  Single source of
+    truth for the fusion benchmarks and tests -- the condition here mirrors
+    the walk in ``apply_cnn`` exactly."""
+    shape = in_shape
+    out = []
+    for i, l in enumerate(layers):
+        if (l.kind == "conv" and i + 2 < len(layers)
+                and layers[i + 1].kind in ("relu", "relu6")
+                and layers[i + 2].kind == "maxpool"):
+            mp = layers[i + 2]
+            out.append((i, shape[0], shape[1], l.cout, l.ksize, l.stride,
+                        l.pad, layers[i + 1].kind, mp.ksize, mp.stride))
+        shape = layer_out_shape(l, shape)
+    return out
+
+
 def init_cnn(key, layers: list[Layer], in_shape: tuple = INPUT_SHAPE):
     params = []
     shape = in_shape
@@ -371,11 +437,16 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
               stop: int | None = None, backend: str | None = None):
     """Run layers [start, stop) -- the split runtime building block.
 
-    On the pallas backend the walk peeks one layer ahead: a conv paper-layer
-    immediately followed by relu/relu6 collapses into a single fused kernel
-    launch (conv + bias + activation in the epilogue).  Both layers are
-    still *counted* -- split indices keep paper-layer semantics -- the pair
-    just executes as one launch when wholly on one side of the split."""
+    On the pallas backend the walk peeks up to two layers ahead: a conv
+    paper-layer immediately followed by relu/relu6 collapses into a single
+    fused kernel launch (conv + bias + activation in the epilogue), and if
+    a maxpool follows the activation the whole conv->relu->maxpool *triple*
+    becomes one launch with the pool running on the fp32 accumulator (no
+    intermediate activation ever written to HBM).  All layers are still
+    *counted* -- split indices keep paper-layer semantics -- and fusion
+    only happens when every member sits wholly on one side of the split
+    ([start, stop)), so the boundary payload is bit-identical to the
+    unfused walk."""
     stop = len(layers) if stop is None else stop
     bk = conv_backend(backend)
     i = start
@@ -383,9 +454,18 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
         layer = layers[i]
         if (bk == "pallas" and layer.kind == "conv" and i + 1 < stop
                 and layers[i + 1].kind in ("relu", "relu6")):
+            pool_k = pool_s = 0
+            step = 2
+            conv_out = layer_out_shape(layer, x.shape[1:])
+            if i + 2 < stop and layers[i + 2].kind == "maxpool":
+                layer_out_shape(layers[i + 2], conv_out)  # named geom check
+                pool_k = layers[i + 2].ksize
+                pool_s = layers[i + 2].stride
+                step = 3
             x = _conv2d(x, params[i]["w"], params[i]["b"], layer.stride,
-                        layer.pad, activation=layers[i + 1].kind, backend=bk)
-            i += 2
+                        layer.pad, activation=layers[i + 1].kind,
+                        pool_k=pool_k, pool_s=pool_s, backend=bk)
+            i += step
             continue
         x = apply_layer(layer, params[i], x, backend=bk)
         i += 1

@@ -71,6 +71,90 @@ def test_profile_shapes_consistent_with_execution(name):
         assert int(np.prod(analytic)) == int(np.prod(real.shape))
 
 
+def _np_adaptive_avgpool(x: np.ndarray, t: int) -> np.ndarray:
+    """Independent reference for torchvision AdaptiveAvgPool2d: output cell
+    (i, j) averages input [floor(i*H/t), ceil((i+1)*H/t)) x [..W..]."""
+    n, c, h, w = x.shape
+    out = np.zeros((n, c, t, t), np.float64)
+    for i in range(t):
+        hs, he = (i * h) // t, -(-((i + 1) * h) // t)
+        for j in range(t):
+            ws, we = (j * w) // t, -(-((j + 1) * w) // t)
+            out[:, :, i, j] = x[:, :, hs:he, ws:we].mean(axis=(2, 3))
+    return out.astype(np.float32)
+
+
+@pytest.mark.parametrize("hw,t", [
+    (227, 6),    # AlexNet's original 227-px input: 227 % 6 != 0
+    (192, 7),    # VGG avgpool target at a 192-px input
+    (13, 6),     # AlexNet 224-px path (13 % 6 != 0 -- even the default
+                 # resolution hits the truncation bug before the avgpool)
+    (224, 7),    # divisible: the cheap uniform-window path
+    (5, 7),      # output larger than input (windows of 1, repeated)
+])
+def test_adaptive_avgpool_matches_torchvision_semantics(hw, t):
+    """Regression: the old reshape implementation truncated trailing
+    rows/cols whenever H % out_hw != 0, silently diverging from
+    AdaptiveAvgPool2d's variable windows at any non-divisible input."""
+    x = np.random.RandomState(0).randn(2, 3, hw, hw).astype(np.float32)
+    got = cnn.apply_layer(cnn.avgpool(t), {}, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), _np_adaptive_avgpool(x, t),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_alexnet_head_odd_resolution_parity(backend):
+    """AlexNet conv stack + avgpool at a non-224 resolution (192 px): the
+    feature map reaching avgpool(6) is 5x5, so the variable-window path is
+    exercised inside a real network on both backends (the old truncating
+    implementation produced an empty window here and NaNs out)."""
+    layers = cnn.ALEXNET[:14]          # through avgpool(6)
+    in_shape = (3, 192, 192)
+    params = cnn.init_cnn(jax.random.PRNGKey(0), layers, in_shape)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1,) + in_shape) * 0.3
+    got = cnn.apply_cnn(layers, params, x, backend=backend)
+    assert got.shape == (1, 256, 6, 6)
+    want_tail = _np_adaptive_avgpool(
+        np.asarray(cnn.apply_cnn(layers[:-1], params[:-1], x,
+                                 backend="xla")), 6)
+    np.testing.assert_allclose(np.asarray(got), want_tail,
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate geometry: clear errors instead of opaque lax failures
+# ---------------------------------------------------------------------------
+def test_layer_out_shape_rejects_too_small_input():
+    with pytest.raises(ValueError, match="conv1.*too small"):
+        cnn.layer_out_shape(
+            cnn.Layer(kind="conv", name="conv1", cout=8, ksize=7), (3, 4, 4))
+    with pytest.raises(ValueError, match="maxpool"):
+        cnn.layer_out_shape(cnn.maxpool(3, 2), (8, 2, 2))
+    with pytest.raises(ValueError, match="avgpool"):
+        cnn.layer_out_shape(cnn.avgpool(0), (8, 4, 4))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_apply_rejects_too_small_input_with_named_layer(backend):
+    """Regression: the xla path used to die deep inside lax with an opaque
+    shape error; both backends must now raise a ValueError naming the
+    offending layer before touching the conv lowering."""
+    layers = [cnn.conv(8, 11, 4, 2), cnn.relu(), cnn.maxpool(3, 2)]
+    in_shape = (3, 8, 8)               # conv out 1x1 -> maxpool empty
+    params = [cnn._init_conv(jax.random.PRNGKey(0), 3, 8, 11), {}, {}]
+    x = jnp.zeros((1,) + in_shape)
+    with pytest.raises(ValueError, match="maxpool"):
+        cnn.apply_cnn(layers, params, x, backend=backend)
+    with pytest.raises(ValueError, match="conv"):
+        cnn.apply_layer(cnn.conv(8, 11, 4, 0), params[0],
+                        jnp.zeros((1, 3, 6, 6)), backend=backend)
+
+
+def test_shapes_through_names_layer_for_bad_input():
+    with pytest.raises(ValueError, match="maxpool.*ksize=2"):
+        cnn.shapes_through(cnn.CNN_MODELS["vgg16"], (3, 20, 20))
+
+
 def test_analytic_flops_match_hlo_alexnet():
     """Our analytic FLOPs vs XLA's cost model on the full network.
 

@@ -127,6 +127,37 @@ def test_choose_tile_h_raises_when_one_row_too_big():
                       budget=1 << 20)
 
 
+def test_vmem_estimate_pooled_epilogue_terms():
+    """With a fused maxpool the streamed output tile shrinks (pooled
+    footprint) while the fp32 accumulator grows to span the conv rows
+    feeding the pool windows -- both terms must show up in the estimate."""
+    kw = dict(cin_block=64, block_co=64, w_in=114, w_out=112, K=3, stride=1,
+              cin_per_group=64)
+    unfused = conv_vmem_bytes(tile_h=8, **kw)
+    fused = conv_vmem_bytes(tile_h=8, pool_k=2, pool_s=2, **kw)
+    # 8 pooled rows need 16 conv rows: bigger input tile + accumulator ...
+    assert fused > unfused
+    # ... but per *conv row covered*, fusion is cheaper than two unfused
+    # tiles of 8 rows, because the pooled output block is 4x smaller
+    assert fused < 2 * unfused
+
+
+def test_choose_tile_h_pool_aware():
+    """Pooled tiling: the returned tile is in pooled rows, its estimate
+    fits the budget, and the implied conv-row span stays pool-aligned."""
+    kw = dict(cin_block=64, block_co=64, w_in=226, w_out=224, K=3, stride=1,
+              cin_per_group=64, pool_k=2, pool_s=2)
+    p_out = (224 - 2) // 2 + 1
+    t = choose_tile_h(p_out, budget=DEFAULT_VMEM_BUDGET, **kw)
+    assert 1 <= t <= p_out
+    assert conv_vmem_bytes(tile_h=t, **kw) <= DEFAULT_VMEM_BUDGET
+    plan = plan_conv((1, 64, 224, 224), (64, 64, 3, 3), stride=1, pad=1,
+                     pool_k=2, pool_s=2)
+    assert plan.tile_h == t and plan.p_out == p_out
+    assert plan.tile_conv_h == (t - 1) * 2 + 2
+    assert plan.tile_in_h == plan.tile_conv_h + 2   # K-1 halo rows
+
+
 def test_vmem_estimate_monotone_in_tile_h():
     kw = dict(cin_block=32, block_co=32, w_in=100, w_out=98, K=3, stride=1,
               cin_per_group=32)

@@ -105,6 +105,39 @@ def test_conv2d_matches_cnn_layer():
 
 
 # ---------------------------------------------------------------------------
+# Pallas execution-mode env: resolved at call time, not import time
+# ---------------------------------------------------------------------------
+def test_pallas_compile_env_resolved_at_call_time(monkeypatch):
+    """Setting REPRO_PALLAS_COMPILE *after* import must change the mode the
+    next kernel call requests (the old module-constant INTERPRET froze the
+    value at import).  The spy forces interpret execution so the test runs
+    on CPU while still observing what the wrapper asked for."""
+    requested = []
+    real = ops._conv.conv2d
+
+    def spy(*args, **kw):
+        requested.append(kw["interpret"])
+        kw["interpret"] = True
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops._conv, "conv2d", spy)
+    # distinctive shape so no earlier test's jit cache entry can absorb the
+    # first (interpret=True) trace
+    x = jax.random.normal(KEY, (1, 5, 9, 9)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (7, 5, 3, 3)) * 0.2
+
+    monkeypatch.delenv("REPRO_PALLAS_COMPILE", raising=False)
+    assert ops.interpret_mode() is True
+    ops.conv2d(x, w, stride=1, pad=1)
+    monkeypatch.setenv("REPRO_PALLAS_COMPILE", "1")
+    assert ops.interpret_mode() is False
+    ops.conv2d(x, w, stride=1, pad=1)   # same shapes: must still retrace
+    # interpret is a static jit arg, so the compile-mode call cannot have
+    # silently reused the interpret-mode executable
+    assert requested == [True, False]
+
+
+# ---------------------------------------------------------------------------
 # RWKV6 WKV
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
