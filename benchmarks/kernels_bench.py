@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from benchmarks.common import save_json, time_us
 from repro.core.hardware import V5E_PEAK_FLOPS_BF16
 from repro.kernels import ops, ref
-from repro.kernels.conv2d import plan_conv
+from repro.kernels.conv2d import conv_vmem_bytes, plan_conv
 
 
 def _pool_triples(model: str) -> list[tuple]:
@@ -99,7 +99,197 @@ def conv_fusion_report() -> list[tuple]:
     return rows
 
 
-def run_all() -> list[tuple]:
+def model_conv_specs(model: str) -> list[tuple]:
+    """(name, cin, hw, cout, K, stride, pad, act, pool_k, pool_s) for every
+    conv paper-layer the model executes at 224 px.  ``pool_k/pool_s`` are
+    non-zero when the conv heads a conv->relu->maxpool triple that the
+    pallas backend fuses into one launch (``cnn.conv_pool_triples``)."""
+    from repro.models import cnn
+    layers = cnn.CNN_MODELS[model]
+    triples = {t[0]: t for t in cnn.conv_pool_triples(layers)}
+    shape = cnn.INPUT_SHAPE
+    out, n = [], 0
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            n += 1
+            nxt = layers[i + 1].kind if i + 1 < len(layers) else ""
+            act = nxt if nxt in ("relu", "relu6") else None
+            pk, ps = (triples[i][-2], triples[i][-1]) if i in triples \
+                else (0, 0)
+            out.append((f"{model}_conv{n}", shape[0], shape[1], l.cout,
+                        l.ksize, l.stride, l.pad, act, pk, ps))
+        shape = cnn.layer_out_shape(l, shape)
+    return out
+
+
+def dtype_plan_stats(cin: int, hw: int, cout: int, K: int, stride: int,
+                     pad: int, pool_k: int = 0, pool_s: int = 0,
+                     batch: int = 1) -> dict:
+    """fp32-vs-bf16 planner comparison for one conv (+fused pool) shape.
+
+    Three numbers matter: VMEM per tile at the *same* tile geometry (the
+    apples-to-apples storage saving -- the fp32 accumulator stays, so the
+    ratio is < 2x), the ``tile_h`` the planner buys back with the freed
+    headroom, and the launch count that falls out of the bigger tiles."""
+    x_shape = (batch, cin, hw, hw)
+    w_shape = (cout, cin, K, K)
+    plans = {}
+    stats = {}
+    for policy, nbytes in (("fp32", 4), ("bf16", 2)):
+        plan = plan_conv(x_shape, w_shape, stride=stride, pad=pad,
+                         pool_k=pool_k, pool_s=pool_s, dtype_bytes=nbytes)
+        plans[policy] = plan
+        stats[policy] = {
+            "tile_h": plan.tile_h, "n_h_blocks": plan.n_h_blocks,
+            "launches": batch * (cout // plan.block_co) * plan.n_h_blocks,
+            "vmem_bytes_per_tile": plan.vmem_bytes,
+            "out_bytes": batch * cout * plan.p_out * plan.pw_out * nbytes,
+        }
+    p32 = plans["fp32"]
+    same_tile = conv_vmem_bytes(
+        cin_block=p32.cin_block, block_co=p32.block_co, tile_h=p32.tile_h,
+        w_in=hw + 2 * pad, w_out=p32.w_out, K=K, stride=stride,
+        cin_per_group=cin, dtype_bytes=2, pool_k=p32.pool_k,
+        pool_s=p32.pool_s)
+    stats["vmem_bytes_bf16_at_fp32_tile"] = same_tile
+    stats["vmem_per_tile_ratio"] = p32.vmem_bytes / same_tile
+    stats["launch_ratio"] = (stats["fp32"]["launches"]
+                             / stats["bf16"]["launches"])
+    stats["transfer_bytes_ratio"] = (stats["fp32"]["out_bytes"]
+                                     / stats["bf16"]["out_bytes"])
+    return stats
+
+
+_SMOKE_CONV_SPECS = [
+    # one tiny shape per conv family: plain conv+relu, fused pool triple
+    ("smoke_conv", 8, 16, 16, 3, 1, 1, "relu", 0, 0),
+    ("smoke_triple", 8, 16, 16, 3, 1, 1, "relu", 2, 2),
+]
+
+
+def dtype_sweep_report(smoke: bool = False) -> list[tuple]:
+    """fp32 vs bf16 storage for every AlexNet/VGG16 conv (+fused pool
+    triple) shape: planner stats (VMEM per tile, tile_h, launch counts),
+    interpret-mode wall time, and max-abs error of the bf16 kernel against
+    the fp32 XLA reference.  Emits BENCH_dtype_sweep.json.
+
+    ``smoke`` runs one tiny shape per family so CI can exercise the whole
+    bench path (planning, execution, JSON emission) in seconds."""
+    key = jax.random.PRNGKey(7)
+    specs = _SMOKE_CONV_SPECS if smoke else [
+        s for m in ("alexnet", "vgg16") for s in model_conv_specs(m)]
+    rows, entries = [], []
+    for name, cin, hw, cout, K, s, p, act, pk, ps in specs:
+        stats = dtype_plan_stats(cin, hw, cout, K, s, p, pk, ps)
+        x = jax.random.normal(key, (1, cin, hw, hw), jnp.float32) * 0.3
+        w = jax.random.normal(jax.random.fold_in(key, 1),
+                              (cout, cin, K, K), jnp.float32) * 0.1
+        b = jax.random.normal(jax.random.fold_in(key, 2),
+                              (cout,), jnp.float32) * 0.1
+        want = ref.conv2d_ref(x, w, stride=s, pad=p, bias=b, activation=act)
+        if pk:
+            want = jax.lax.reduce_window(
+                want, -jnp.inf, jax.lax.max, (1, 1, pk, pk),
+                (1, 1, ps, ps), "VALID")
+        want = jax.block_until_ready(want)
+        macs = K * K * cin * cout * hw * hw
+        repeats = 1 if macs > 5e8 else 3
+        us, err = {}, {}
+        for policy in ("fp32", "bf16"):
+            def run(policy=policy):
+                return jax.block_until_ready(ops.conv2d(
+                    x, w, stride=s, pad=p, bias=b, activation=act,
+                    pool_k=pk, pool_s=ps, dtype=policy))
+            got = run().astype(jnp.float32)      # doubles as the warmup
+            us[policy] = time_us(run, repeats=repeats, warmup=0)
+            err[policy] = float(jnp.max(jnp.abs(got - want)))
+        denom = float(jnp.max(jnp.abs(want)))
+        entries.append({
+            "name": name,
+            "shape": {"cin": cin, "hw": hw, "cout": cout, "K": K,
+                      "stride": s, "pad": p, "act": act,
+                      "pool_k": pk, "pool_s": ps},
+            **stats,
+            "fp32_us": us["fp32"], "bf16_us": us["bf16"],
+            "max_abs_err_fp32": err["fp32"],
+            "max_abs_err_bf16": err["bf16"],
+            "max_rel_err_bf16": err["bf16"] / denom if denom else 0.0,
+        })
+        rows.append((
+            f"kernels.dtype_sweep.{name}", us["bf16"],
+            f"fp32_us={us['fp32']:.1f} "
+            f"tile_h={stats['fp32']['tile_h']}->{stats['bf16']['tile_h']} "
+            f"launches={stats['fp32']['launches']}->"
+            f"{stats['bf16']['launches']} "
+            f"vmem_ratio={stats['vmem_per_tile_ratio']:.2f} "
+            f"max_abs_err={err['bf16']:.3e}"))
+    fname = "BENCH_dtype_sweep_smoke.json" if smoke \
+        else "BENCH_dtype_sweep.json"
+    path = save_json("", fname, {
+        "smoke": smoke,
+        "entries": entries,
+        "totals": {
+            "n_shapes": len(entries),
+            "launches_fp32": sum(e["fp32"]["launches"] for e in entries),
+            "launches_bf16": sum(e["bf16"]["launches"] for e in entries),
+            "min_vmem_per_tile_ratio": min(
+                e["vmem_per_tile_ratio"] for e in entries),
+            "max_abs_err_bf16": max(
+                e["max_abs_err_bf16"] for e in entries),
+        }})
+    rows.append(("kernels.dtype_sweep.json", None, path))
+    return rows
+
+
+def run_smoke() -> list[tuple]:
+    """One tiny shape per kernel family, in seconds: the CI bench-smoke
+    gate that keeps the bench path itself from rotting."""
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # conv family (tiled kernel + fused triple + dtype sweep JSON)
+    rows += dtype_sweep_report(smoke=True)
+
+    # flash attention: one 128-token tile pair
+    B, S, H, KV, hd = 1, 128, 2, 1, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd),
+                          jnp.float32) * 0.3
+    us = time_us(lambda: jax.block_until_ready(
+        ops.flash_attention_gqa(q, k, v, block_q=64, block_k=64)),
+        repeats=1)
+    rows.append(("kernels.smoke.flash_attention.128x64", us, "interpret"))
+
+    # rwkv6 wkv: 32 tokens x 1 head
+    r = jax.random.normal(key, (1, 32, 1, 32)) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(key, 4), (1, 32, 1, 32)) * 0.3
+    vv = jax.random.normal(jax.random.fold_in(key, 5), (1, 32, 1, 32)) * 0.3
+    ww = jax.nn.sigmoid(
+        jax.random.normal(jax.random.fold_in(key, 6), (1, 32, 1, 32))) \
+        * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(key, 7), (1, 32)) * 0.1
+    us = time_us(lambda: jax.block_until_ready(
+        ops.rwkv6_wkv(r, kk, vv, ww, u, block_t=16)), repeats=1)
+    rows.append(("kernels.smoke.rwkv6_wkv.32tok", us, "interpret"))
+
+    # mamba2 ssd: 64 tokens
+    x2 = jax.random.normal(key, (1, 64, 1, 16)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 8),
+                                           (1, 64, 1)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 9), (1,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 10), (1, 64, 1, 8)) * 0.4
+    Cm = jax.random.normal(jax.random.fold_in(key, 11), (1, 64, 1, 8)) * 0.4
+    us = time_us(lambda: jax.block_until_ready(
+        ops.mamba2_ssd(x2, dt, A, Bm, Cm, chunk=32)), repeats=1)
+    rows.append(("kernels.smoke.mamba2_ssd.64tok", us, "interpret"))
+    return rows
+
+
+def run_all(smoke: bool = False) -> list[tuple]:
+    if smoke:
+        return run_smoke()
     rows = []
     key = jax.random.PRNGKey(0)
 
@@ -183,6 +373,9 @@ def run_all() -> list[tuple]:
 
     # fused conv+relu+maxpool triples (AlexNet/VGG16) + BENCH_conv_fusion
     rows += conv_fusion_report()
+
+    # fp32 vs bf16 storage sweep (planner + parity) + BENCH_dtype_sweep
+    rows += dtype_sweep_report()
 
     # rwkv6 wkv: 64 tokens x 2 heads
     b, t, h, hd2 = 1, 64, 2, 64

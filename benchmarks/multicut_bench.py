@@ -8,14 +8,14 @@ import time
 
 import numpy as np
 
-from benchmarks.common import save_json, time_us
+from benchmarks.common import save_json
 from repro.core.hardware import DCN_LINK, tpu_pod_tier
 from repro.core.multicut import (ChainHardware, evaluate_multicut,
                                  smartsplit_multicut)
 from repro.core.nsga2 import NSGA2Config
 from repro.core.pareto import exhaustive_pareto
 from repro.core.topsis import topsis_select
-from repro.models.profiles import cnn_profile, transformer_profile
+from repro.models.profiles import transformer_profile
 
 
 def _chain(K: int) -> ChainHardware:

@@ -2,16 +2,26 @@
 beyond-paper roofline/kernel/TPU-split reports.
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract); full
-artefacts are written to benchmarks/out/."""
+artefacts are written to benchmarks/out/.
+
+Usage: ``python benchmarks/run.py [section] [--smoke]``.  ``--smoke`` runs
+one tiny shape per kernel family in interpret mode (seconds, not minutes)
+so CI can gate the bench path itself; sections without a smoke variant are
+skipped in that mode.
+"""
 from __future__ import annotations
 
+import inspect
 import sys
 
 from benchmarks.common import emit
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = sys.argv[1:]
+    smoke = "--smoke" in argv
+    argv = [a for a in argv if a != "--smoke"]
+    only = argv[0] if argv else None
     sections = {}
 
     from benchmarks import paper_tables
@@ -41,6 +51,11 @@ def main() -> None:
     emit([], header=True)
     for name, fn in sections.items():
         if only and name != only:
+            continue
+        has_smoke = "smoke" in inspect.signature(fn).parameters
+        if smoke:
+            if has_smoke:
+                emit(fn(smoke=True))
             continue
         emit(fn())
 

@@ -7,9 +7,7 @@ objective triple, and how it compares against the LBO/EBO/COS/COC
 baselines -- the paper's Table II transplanted to the TPU fleet."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import save_json, time_us
+from benchmarks.common import save_json
 from repro.configs import all_configs
 from repro.core import (ALGORITHMS, TPU_EDGE_CLOUD, evaluate_objectives,
                         smartsplit_exhaustive)

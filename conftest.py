@@ -1,0 +1,10 @@
+"""Repo-root conftest.
+
+Keeps the repo root on sys.path so tests can import the ``benchmarks``
+namespace package (shape enumerations, smoke reports) regardless of how
+pytest is invoked: ``python -m pytest`` adds the cwd itself, a bare
+``pytest`` does not."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -9,11 +9,9 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PAPER_ENV_J6, evaluate_objectives, smartsplit,
-                        total_energy, total_latency)
+from repro.core import PAPER_ENV_J6, evaluate_objectives, smartsplit
 from repro.models import cnn
 from repro.models.profiles import cnn_profile
 
@@ -44,7 +42,8 @@ def main():
     np.testing.assert_allclose(np.asarray(split_logits),
                                np.asarray(full_logits), rtol=1e-5,
                                atol=1e-5)
-    sent = boundary.size * 4
+    # boundary dtype follows the storage policy (REPRO_CONV_DTYPE)
+    sent = boundary.size * boundary.dtype.itemsize
     modelled = profile.boundary()[plan.split_index]
     print(f"boundary payload: runtime {sent} B == model {modelled:.0f} B")
     assert sent == modelled

@@ -13,7 +13,6 @@ import jax
 import numpy as np
 
 from repro.configs import all_configs
-from repro.models import transformer as T
 from repro.training import checkpoint as ckpt
 from repro.training.train_loop import TrainConfig, train
 

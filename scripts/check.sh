@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 verification -- the exact command ROADMAP.md documents.
+# Tier-1 verification -- the exact command ROADMAP.md documents (and the
+# blocking `tier1` job in .github/workflows/ci.yml runs).  Lint first when
+# available (scripts/lint.sh no-ops without ruff), then the fast test gate.
 # Run from the repo root: scripts/check.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+scripts/lint.sh
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow" "$@"

@@ -13,7 +13,6 @@ Block kinds:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 VOCAB_PAD_MULTIPLE = 2048  # lcm-friendly with a 16-way model axis
 

@@ -5,6 +5,8 @@ from repro.core.costs import (LayerProfile, ModelProfile, client_memory,
                               energy_terms, evaluate_objectives,
                               feasible_mask, latency_terms, total_energy,
                               total_latency)
+from repro.core.dtype_policy import (CONV_DTYPES, conv_dtype, dtype_bytes,
+                                     policy_jnp_dtype)
 from repro.core.hardware import (PAPER_ENV_J6, PAPER_ENV_NOTE8, PROFILES,
                                  TPU_EDGE_CLOUD, TPU_TWO_POD, DeviceTier,
                                  LinkProfile, TwoTierHardware, tpu_pod_tier)
@@ -20,6 +22,7 @@ __all__ = [
     "LayerProfile", "ModelProfile", "client_memory", "energy_terms",
     "evaluate_objectives", "feasible_mask", "latency_terms", "total_energy",
     "total_latency",
+    "CONV_DTYPES", "conv_dtype", "dtype_bytes", "policy_jnp_dtype",
     "PAPER_ENV_J6", "PAPER_ENV_NOTE8", "PROFILES", "TPU_EDGE_CLOUD",
     "TPU_TWO_POD", "DeviceTier", "LinkProfile", "TwoTierHardware",
     "tpu_pod_tier",

@@ -25,10 +25,10 @@ else is identical in form.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
+from repro.core.dtype_policy import conv_dtype, dtype_bytes
 from repro.core.hardware import DeviceTier, TwoTierHardware
 
 
@@ -55,15 +55,46 @@ class LayerProfile:
 
 @dataclasses.dataclass(frozen=True)
 class ModelProfile:
-    """A splittable model: ordered layers + input size."""
+    """A splittable model: ordered layers + input size.
+
+    ``dtype`` records the storage policy every byte term was computed
+    under (fp32 | bf16).  The latency/energy/memory models below consume
+    bytes, so they are dtype-aware through the profile: a bf16 profile's
+    memory and transfer terms are half its fp32 twin's, and the optimiser
+    can pick splits that only fit the client budget at bf16."""
 
     name: str
     layers: tuple[LayerProfile, ...]
     input_bytes: float          # payload if split at l1 = 0 (COC)
+    dtype: str = "fp32"         # storage policy the byte terms assume
+    # Whether the l1=0 input upload is stored under the policy too.  True
+    # for the CNNs (the client casts the image like any activation);
+    # False when the input is policy-independent (int32 token ids).
+    input_follows_dtype: bool = True
 
     @property
     def num_layers(self) -> int:
         return len(self.layers)
+
+    def with_dtype(self, dtype: str) -> "ModelProfile":
+        """The same model re-profiled under another storage policy: every
+        byte term (weights, activations, boundary payloads, migrating
+        state, and -- unless ``input_follows_dtype`` is off -- the input
+        upload) rescales by the element-size ratio; FLOPs are unchanged
+        (the fp32 accumulator does the same arithmetic)."""
+        policy = conv_dtype(dtype)
+        ratio = dtype_bytes(policy) / dtype_bytes(self.dtype)
+        if ratio == 1.0:
+            return dataclasses.replace(self, dtype=policy)
+        layers = tuple(dataclasses.replace(
+            l, param_bytes=l.param_bytes * ratio,
+            act_bytes=l.act_bytes * ratio,
+            boundary_bytes=l.boundary_bytes * ratio,
+            state_bytes=l.state_bytes * ratio) for l in self.layers)
+        in_b = self.input_bytes * ratio if self.input_follows_dtype \
+            else self.input_bytes
+        return dataclasses.replace(self, layers=layers, input_bytes=in_b,
+                                   dtype=policy)
 
     # -- cumulative views (vectorised; the GA evaluates whole populations) --
     def cum_mem(self) -> np.ndarray:

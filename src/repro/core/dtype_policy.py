@@ -1,0 +1,57 @@
+"""The conv-path storage-dtype policy (fp32 | bf16).
+
+SmartSplit's objectives are dominated by bytes: per-layer memory on the
+client, and the boundary activation shipped across the link.  Storing conv
+weights/activations in bf16 -- while keeping the kernel's fp32 accumulator
+-- halves per-tile VMEM (bigger ``tile_h``, fewer launches), halves the
+split-boundary transfer payload, and doubles effective MXU throughput.
+
+One policy string is plumbed end to end:
+
+* kernels (``repro.kernels.ops.conv2d``): cast storage, accumulate fp32;
+* models (``repro.models.cnn.apply_cnn``): activations flow in the policy
+  dtype, boundary payloads are serialized in it;
+* cost model (``repro.models.profiles`` / ``repro.core.costs``): memory and
+  transfer terms scale with ``dtype_bytes`` so the optimiser can choose
+  splits that are only feasible at bf16;
+* split executors (``repro.launch.smartsplit_exec``): the inter-pod
+  boundary tensor crosses the link in the policy dtype.
+
+Resolution order everywhere: explicit ``dtype=`` argument, else the
+``REPRO_CONV_DTYPE`` env var, else ``fp32``.  ``fp32`` is the no-downcast
+default: tensors keep whatever dtype they already have.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_CONV_DTYPE"
+
+CONV_DTYPES = ("fp32", "bf16")
+
+_DTYPE_BYTES = {"fp32": 4, "bf16": 2}
+
+
+def conv_dtype(dtype: str | None = None) -> str:
+    """Resolve the storage-dtype policy *now* (mirrors ``conv_backend``).
+
+    Explicit argument wins, else ``REPRO_CONV_DTYPE``, else ``fp32``."""
+    d = dtype or os.environ.get(ENV_VAR, "fp32")
+    if d not in CONV_DTYPES:
+        source = "dtype argument" if dtype else ENV_VAR
+        raise ValueError(f"{source} must be one of {CONV_DTYPES}, got {d!r}")
+    return d
+
+
+def dtype_bytes(policy: str) -> int:
+    """Bytes per element stored under ``policy``."""
+    return _DTYPE_BYTES[conv_dtype(policy)]
+
+
+def policy_jnp_dtype(policy: str):
+    """The jnp dtype tensors are stored in under ``policy``.
+
+    Imported lazily so the numpy-only core modules stay jax-free."""
+    import jax.numpy as jnp
+
+    return {"fp32": jnp.float32, "bf16": jnp.bfloat16}[conv_dtype(policy)]

@@ -46,6 +46,15 @@ tile reads in-bounds and slices the padded output rows away.
 The epilogue (bias add + relu/relu6 + optional maxpool) runs on the fp32
 accumulator before writeback, so a paper-layer conv+relu+maxpool *triple*
 is one kernel launch with no intermediate activation round-tripping HBM.
+
+Storage dtype: the kernel is dtype-polymorphic over the *streamed* blocks.
+Input rows, weights, and the output tile move in ``x.dtype`` (fp32 or
+bf16 under the ``REPRO_CONV_DTYPE`` policy -- see ``kernels.ops.conv2d``)
+and are upcast on load; the accumulator, bias column, and every epilogue
+op are always fp32, and the result is cast back to ``x.dtype`` only at
+writeback.  With 2-byte storage the ``B``-scaled terms of the VMEM model
+halve, so ``choose_tile_h`` (fed ``dtype_bytes = x.dtype.itemsize``)
+roughly doubles the row tile and the grid needs fewer launches.
 Grouped convolution (``feature_group_count``) is supported: pointwise
 (groups=1), group-aligned channel blocks (1 < groups < Cin), and the
 depthwise case (cin_per_group == 1) which runs an elementwise VPU path

@@ -16,6 +16,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.dtype_policy import conv_dtype, policy_jnp_dtype
 from repro.kernels import conv2d as _conv
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba2_ssd as _ssd
@@ -79,7 +80,7 @@ def _conv2d(x, w, *, stride, pad, bias, activation, groups, pool_k, pool_s,
 
 def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
            activation: str | None = None, groups: int = 1,
-           pool_k: int = 0, pool_s: int = 0):
+           pool_k: int = 0, pool_s: int = 0, dtype: str | None = None):
     """Fused conv(+bias)(+relu/relu6)(+maxpool): one tiled kernel launch.
 
     ``bias`` (Cout,) and ``activation`` run in the kernel epilogue on the
@@ -87,7 +88,19 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
     Cin for depthwise).  ``pool_k > 0`` fuses a VALID
     ``maxpool(pool_k, pool_s)`` after the activation so a paper-layer
     conv->relu->maxpool triple is a single launch -- the conv activation
-    never round-trips HBM."""
+    never round-trips HBM.
+
+    ``dtype`` is the storage policy (``fp32`` | ``bf16``; default resolves
+    ``REPRO_CONV_DTYPE`` at call time).  Under ``bf16`` the input and
+    weights are stored/staged as bfloat16 -- the planner sees 2-byte
+    elements and doubles ``tile_h`` for the same VMEM budget -- while the
+    accumulator, bias add, activation, and pool epilogue all stay fp32;
+    the output tensor is returned in the storage dtype.  ``fp32`` is the
+    no-downcast default: tensors keep whatever dtype they already have."""
+    if conv_dtype(dtype) == "bf16":
+        jdt = policy_jnp_dtype("bf16")
+        x = x if x.dtype == jdt else x.astype(jdt)
+        w = w if w.dtype == jdt else w.astype(jdt)
     return _conv2d(x, w, stride=stride, pad=pad, bias=bias,
                    activation=activation, groups=groups,
                    pool_k=pool_k, pool_s=pool_s, interpret=interpret_mode())

@@ -26,15 +26,22 @@ def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
 
 
 def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0, bias=None,
-               activation: str | None = None, groups: int = 1):
+               activation: str | None = None, groups: int = 1,
+               accum_dtype=None):
     """x: (N, Cin, H, W); w: (Cout, Cin/groups, K, K). Direct lax conv,
     optionally grouped (``feature_group_count``) with the same fused
-    epilogue the Pallas kernel offers (bias + relu/relu6)."""
+    epilogue the Pallas kernel offers (bias + relu/relu6).
+
+    ``accum_dtype`` (e.g. fp32 for bf16 inputs) mirrors the Pallas
+    kernel's storage/accumulate split: the conv accumulates -- and the
+    epilogue runs -- in that dtype, and the result is cast back to the
+    storage dtype at the end."""
     y = jax.lax.conv_general_dilated(
         x, w, window_strides=(stride, stride),
         padding=[(pad, pad), (pad, pad)],
         dimension_numbers=("NCHW", "OIHW", "NCHW"),
-        feature_group_count=groups)
+        feature_group_count=groups,
+        preferred_element_type=accum_dtype)
     if bias is not None:
         y = y + bias[None, :, None, None].astype(y.dtype)
     if activation == "relu":
@@ -43,7 +50,7 @@ def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0, bias=None,
         y = jnp.clip(y, 0.0, 6.0)
     elif activation is not None:
         raise ValueError(f"unknown activation {activation!r}")
-    return y
+    return y if accum_dtype is None else y.astype(x.dtype)
 
 
 def rwkv6_wkv_ref(r, k, v, w, u, s0=None):

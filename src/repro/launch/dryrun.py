@@ -24,7 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.hlo import (collective_bytes, collective_counts,
                                 cost_analysis_dict)

@@ -15,8 +15,6 @@ anchors.  The SmartSplit two-stage executor (the paper's technique) lives
 in ``launch/smartsplit_exec.py``."""
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -25,6 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
+from repro.core.dtype_policy import conv_dtype, policy_jnp_dtype
 from repro.launch.mesh import data_axes
 from repro.models import transformer as T
 from repro.training import optimizer as opt
@@ -324,6 +323,26 @@ def cache_struct(cfg: ModelConfig, shape: InputShape, mesh,
         return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
                                     sharding=NamedSharding(mesh, spec))
     return _map_with_paths(shapes, attach)
+
+
+def split_boundary_struct(cfg: ModelConfig, batch: int, seq_len: int,
+                          mesh=None, dtype: str | None = None):
+    """The tensor that crosses the client->server link under a SmartSplit
+    placement, serialized in the storage-policy dtype.
+
+    Returns ``(struct, nbytes)``: a ShapeDtypeStruct for the boundary
+    hidden state (batch, seq_len, d_model) -- replicated over the mesh
+    when one is given, since both pods touch it -- and its wire size in
+    bytes, which is exactly the I|l1 the dtype-aware cost model feeds
+    Eq. 4.  ``two_stage_apply(..., boundary_dtype=...)`` transfers this
+    very tensor; keeping the accounting here means the planner, the
+    executor, and the serving launcher can never disagree about the
+    payload."""
+    jdt = policy_jnp_dtype(conv_dtype(dtype))
+    shape = (batch, seq_len, cfg.d_model)
+    sharding = NamedSharding(mesh, P()) if mesh is not None else None
+    struct = jax.ShapeDtypeStruct(shape, jdt, sharding=sharding)
+    return struct, int(np.prod(shape)) * jnp.dtype(jdt).itemsize
 
 
 # ---------------------------------------------------------------------------

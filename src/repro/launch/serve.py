@@ -14,7 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import all_configs
-from repro.core import TPU_EDGE_CLOUD, smartsplit
+from repro.core import CONV_DTYPES, TPU_EDGE_CLOUD, smartsplit
+from repro.core.dtype_policy import conv_dtype
+from repro.core.dtype_policy import dtype_bytes as policy_bytes
+from repro.launch.partition import split_boundary_struct
 from repro.models import transformer as T
 from repro.models.profiles import transformer_profile
 from repro.serving.engine import Engine
@@ -28,6 +31,9 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--plan-split", action="store_true")
+    ap.add_argument("--dtype", default=None, choices=CONV_DTYPES,
+                    help="boundary/storage dtype policy for --plan-split "
+                         "(default: REPRO_CONV_DTYPE, else fp32)")
     args = ap.parse_args()
 
     cfg = all_configs()[args.arch].reduced()
@@ -36,13 +42,18 @@ def main():
         raise SystemExit(f"{args.arch} is encoder-only: no serving decode")
 
     if args.plan_split:
+        policy = conv_dtype(args.dtype)
         prof = transformer_profile(cfg, seq_len=64, batch=args.max_batch,
-                                   mode="prefill")
+                                   mode="prefill",
+                                   dtype_bytes=policy_bytes(policy))
         plan = smartsplit(prof, TPU_EDGE_CLOUD)
         lat, en, mem = plan.objectives
+        _, link_bytes = split_boundary_struct(cfg, args.max_batch, 64,
+                                              dtype=policy)
         print(f"SmartSplit: l1={plan.split_index}/{cfg.num_layers} "
               f"latency={lat:.2e}s energy={en:.2e}J "
-              f"edge-mem={mem / 2**20:.1f}MiB")
+              f"edge-mem={mem / 2**20:.1f}MiB "
+              f"boundary={link_bytes}B ({policy})")
 
     params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     eng = Engine(cfg, params, max_len=128, max_batch=args.max_batch)

@@ -23,9 +23,6 @@ microbatch pipelining over the same weights (the beyond-paper §Perf item),
 bringing steady-state utilisation of both pods to ~m/(m+1)."""
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -33,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.dtype_policy import conv_dtype, policy_jnp_dtype
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -57,9 +55,17 @@ def stage_params(cfg: ModelConfig, params, l1: int):
 
 
 def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
-                            pipelined: bool = False, microbatches: int = 4):
+                            pipelined: bool = False, microbatches: int = 4,
+                            boundary_dtype: str | None = None):
     """Returns fn(staged_blocks, mask, embed, unembed, final_norm, tokens)
     -> logits, to be called with staged blocks sharded P('pod') on dim 0.
+
+    ``boundary_dtype`` is the storage policy (``conv_dtype``; env
+    ``REPRO_CONV_DTYPE``): under ``bf16`` the boundary activation -- the
+    paper's "intermediate model upload" -- crosses the inter-pod link
+    serialized as bfloat16 (half the ppermute payload, matching the
+    dtype-aware cost model's I|l1 term) and is upcast back to the compute
+    dtype on arrival.  ``fp32`` transfers the activation as-is.
 
     Restricted to the uniform-pattern architectures (attn/MoE/RWKV/Mamba
     without shared blocks); zamba2 splits at segment granularity via the
@@ -67,6 +73,8 @@ def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
     kind = cfg.pattern
     assert not (kind == "mamba" and cfg.attn_every), \
         "zamba2: split at segment granularity"
+    link_dt = policy_jnp_dtype(boundary_dtype) \
+        if conv_dtype(boundary_dtype) == "bf16" else None
 
     def run_stage(blocks, mask, h, positions):
         def body(carry, inp):
@@ -89,9 +97,12 @@ def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
 
         if not pipelined:
             h1 = run_stage(blocks, mask, h0, positions)          # phase 1
-            recv = jax.lax.ppermute(h1, "pod", [(0, 1)])         # upload
+            # upload: the boundary activation crosses the link in the
+            # storage-policy dtype (bf16 halves the ppermute payload)
+            sent = h1 if link_dt is None else h1.astype(link_dt)
+            recv = jax.lax.ppermute(sent, "pod", [(0, 1)])
             pod = jax.lax.axis_index("pod")
-            h2_in = jnp.where(pod == 1, recv, h1)
+            h2_in = jnp.where(pod == 1, recv.astype(h1.dtype), h1)
             h2 = run_stage(blocks, mask, h2_in, positions)       # phase 2
         else:
             # GPipe-style: m microbatches, 2-stage pipeline.
@@ -102,15 +113,20 @@ def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
             pod = jax.lax.axis_index("pod")
 
             def tick(carry, xs):
-                inflight = carry          # activation each pod works on
+                inflight = carry          # link-dtype activation in flight
                 mb_in = xs                # next microbatch (for pod 0)
-                my_in = jnp.where(pod == 0, mb_in, inflight)
+                my_in = jnp.where(pod == 0, mb_in,
+                                  inflight.astype(mb_in.dtype))
                 out = run_stage(blocks, mask, my_in, pos_mb)
-                sent = jax.lax.ppermute(out, "pod", [(0, 1)])
+                sent = out if link_dt is None else out.astype(link_dt)
+                sent = jax.lax.ppermute(sent, "pod", [(0, 1)])
                 return sent, out          # pod1's out = finished microbatch
 
             pad = jnp.zeros_like(mb[0])
-            feed = jnp.concatenate([mb, pad[None]], axis=0)      # m+1 ticks
+            if link_dt is not None:
+                pad = pad.astype(link_dt)
+            feed = jnp.concatenate([mb, jnp.zeros_like(mb[0])[None]],
+                                   axis=0)                       # m+1 ticks
             _, outs = jax.lax.scan(tick, pad, feed)
             h2 = outs[1:].reshape(B, S, -1)  # pod1 finished mb i at tick i+1
 
@@ -131,12 +147,15 @@ def build_two_stage_forward(cfg: ModelConfig, mesh, l1: int,
 
 
 def two_stage_apply(cfg: ModelConfig, params, tokens, mesh, l1: int,
-                    pipelined: bool = False, microbatches: int = 4):
+                    pipelined: bool = False, microbatches: int = 4,
+                    boundary_dtype: str | None = None):
     """Convenience wrapper: stage, place, and run. Returns logits identical
-    (up to float assoc) to the monolithic ``forward``."""
+    (up to float assoc; bf16 boundary adds ~1e-2 relative) to the
+    monolithic ``forward``."""
     staged, mask = stage_params(cfg, params, l1)
     unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
-    fn = build_two_stage_forward(cfg, mesh, l1, pipelined, microbatches)
+    fn = build_two_stage_forward(cfg, mesh, l1, pipelined, microbatches,
+                                 boundary_dtype=boundary_dtype)
     staged = jax.device_put(
         staged, jax.tree.map(lambda _: NamedSharding(mesh, P("pod")),
                              staged))

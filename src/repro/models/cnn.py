@@ -16,14 +16,18 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-DTYPE_BYTES = 4  # fp32
+# Storage-dtype policy (re-exported: models-layer callers resolve the
+# policy through cnn.* like they resolve conv_backend).
+from repro.core.dtype_policy import CONV_DTYPES as CONV_DTYPES
+from repro.core.dtype_policy import conv_dtype as conv_dtype
+from repro.core.dtype_policy import dtype_bytes as dtype_bytes
+from repro.core.dtype_policy import policy_jnp_dtype as policy_jnp_dtype
 
 CONV_BACKENDS = ("xla", "pallas")
 
@@ -239,20 +243,30 @@ def _maxpool(x, k, s):
 
 
 def _conv2d(x, w, b, stride, pad, groups=1, activation=None,
-            pool_k=0, pool_s=0, backend=None):
+            pool_k=0, pool_s=0, backend=None, dtype=None):
     """Backend-dispatched conv(+bias)(+act)(+maxpool).
 
     On pallas the whole chain is one kernel launch; on xla the pool (if
     any) runs as a separate reduce_window so both backends share the same
-    call signature and semantics."""
+    call signature and semantics.  ``dtype`` is the storage policy
+    (``conv_dtype``): under bf16 both backends store inputs/weights and
+    the returned activation in bfloat16 while accumulating in fp32."""
+    policy = conv_dtype(dtype)
     if conv_backend(backend) == "pallas":
         from repro.kernels import ops
         return ops.conv2d(x, w, stride=stride, pad=pad, bias=b,
                           activation=activation, groups=groups,
-                          pool_k=pool_k, pool_s=pool_s)
+                          pool_k=pool_k, pool_s=pool_s, dtype=policy)
     from repro.kernels import ref
+    accum = None
+    if policy == "bf16":
+        jdt = policy_jnp_dtype(policy)
+        x = x if x.dtype == jdt else x.astype(jdt)
+        w = w if w.dtype == jdt else w.astype(jdt)
+        accum = jnp.float32
     y = ref.conv2d_ref(x, w, stride=stride, pad=pad, bias=b,
-                       activation=activation, groups=groups)
+                       activation=activation, groups=groups,
+                       accum_dtype=accum)
     return _maxpool(y, pool_k, pool_s or pool_k) if pool_k else y
 
 
@@ -274,12 +288,13 @@ def _adaptive_avgpool_1d(x: jnp.ndarray, axis: int, out: int) -> jnp.ndarray:
 
 
 def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
-                train: bool = False, backend: str | None = None) -> jnp.ndarray:
+                train: bool = False, backend: str | None = None,
+                dtype: str | None = None) -> jnp.ndarray:
     if layer.kind in ("conv", "maxpool", "avgpool"):
         layer_out_shape(layer, x.shape[1:])   # fail with a named layer
     if layer.kind == "conv":
         return _conv2d(x, params["w"], params["b"], layer.stride, layer.pad,
-                       backend=backend)
+                       backend=backend, dtype=dtype)
     if layer.kind == "relu":
         return jax.nn.relu(x)
     if layer.kind == "relu6":
@@ -294,27 +309,32 @@ def apply_layer(layer: Layer, params: Any, x: jnp.ndarray,
         # trailing rows/cols whenever H % out_hw != 0, e.g. 227-px AlexNet)
         x = _adaptive_avgpool_1d(x, 2, layer.out_hw)
         return _adaptive_avgpool_1d(x, 3, layer.out_hw)
-    if layer.kind == "linear":
-        if x.ndim > 2:
+    if layer.kind in ("linear", "gap_linear"):
+        if layer.kind == "linear" and x.ndim > 2:
             x = x.reshape(x.shape[0], -1)
-        return x @ params["w"] + params["b"]
-    if layer.kind == "gap_linear":
-        if x.ndim == 4:
+        if layer.kind == "gap_linear" and x.ndim == 4:
             x = x.mean(axis=(2, 3))
-        return x @ params["w"] + params["b"]
+        # same storage/accumulate split as the conv kernel: weights and
+        # activations stored in the policy dtype, matmul in fp32 (so the
+        # analytic profile's per-layer weight bytes match the runtime)
+        jdt = policy_jnp_dtype(conv_dtype(dtype))
+        w = params["w"].astype(jdt).astype(jnp.float32)
+        y = x.astype(jnp.float32) @ w + params["b"]
+        return y.astype(jdt)
     if layer.kind == "invres":
         # conv+relu6 pairs fuse into one kernel launch on the pallas backend
         y = x
         hidden_in = x
         if "expand" in params:
             y = _conv2d(y, params["expand"]["w"], params["expand"]["b"], 1, 0,
-                        activation="relu6", backend=backend)
+                        activation="relu6", backend=backend, dtype=dtype)
         y = _conv2d(y, params["dw"]["w"], params["dw"]["b"], layer.stride, 1,
-                    groups=y.shape[1], activation="relu6", backend=backend)
+                    groups=y.shape[1], activation="relu6", backend=backend,
+                    dtype=dtype)
         y = _conv2d(y, params["project"]["w"], params["project"]["b"], 1, 0,
-                    backend=backend)
+                    backend=backend, dtype=dtype)
         if layer.stride == 1 and hidden_in.shape == y.shape:
-            y = y + hidden_in
+            y = y + hidden_in.astype(y.dtype)
         return y
     raise ValueError(layer.kind)
 
@@ -434,7 +454,8 @@ def init_cnn(key, layers: list[Layer], in_shape: tuple = INPUT_SHAPE):
 
 
 def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
-              stop: int | None = None, backend: str | None = None):
+              stop: int | None = None, backend: str | None = None,
+              dtype: str | None = None):
     """Run layers [start, stop) -- the split runtime building block.
 
     On the pallas backend the walk peeks up to two layers ahead: a conv
@@ -446,9 +467,24 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
     *counted* -- split indices keep paper-layer semantics -- and fusion
     only happens when every member sits wholly on one side of the split
     ([start, stop)), so the boundary payload is bit-identical to the
-    unfused walk."""
+    unfused walk.
+
+    ``dtype`` is the storage policy (``conv_dtype``; env
+    ``REPRO_CONV_DTYPE``): under ``bf16`` every conv stores its weights /
+    activations / pooled outputs in bfloat16 (fp32 accumulate), so the
+    activation stream -- including any split-boundary payload -- flows at
+    half the bytes.  Linear/gap_linear heads follow the same rule (bf16
+    weight/activation storage, fp32 matmul), so the analytic profile's
+    per-layer weight and activation bytes match the runtime everywhere."""
     stop = len(layers) if stop is None else stop
     bk = conv_backend(backend)
+    dt = conv_dtype(dtype)
+    if dt != "fp32":
+        # the storage invariant starts at the input: even a degenerate
+        # l1=0 split (COC) uploads the policy-dtype tensor the profile's
+        # input_bytes term charges
+        jdt = policy_jnp_dtype(dt)
+        x = x if x.dtype == jdt else x.astype(jdt)
     i = start
     while i < stop:
         layer = layers[i]
@@ -464,21 +500,24 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
                 step = 3
             x = _conv2d(x, params[i]["w"], params[i]["b"], layer.stride,
                         layer.pad, activation=layers[i + 1].kind,
-                        pool_k=pool_k, pool_s=pool_s, backend=bk)
+                        pool_k=pool_k, pool_s=pool_s, backend=bk, dtype=dt)
             i += step
             continue
-        x = apply_layer(layer, params[i], x, backend=bk)
+        x = apply_layer(layer, params[i], x, backend=bk, dtype=dt)
         i += 1
     return x
 
 
 def apply_split(layers: list[Layer], params, x, split_index: int,
-                backend: str | None = None):
+                backend: str | None = None, dtype: str | None = None):
     """Client runs [0, l1), payload crosses the link, server runs [l1, L).
 
-    Returns (logits, boundary_payload) so callers can account the transfer."""
+    Returns (logits, boundary_payload) so callers can account the transfer.
+    Under the bf16 storage policy the boundary tensor is serialized in
+    bfloat16 -- exactly the halved I|l1 the dtype-aware cost model feeds
+    the optimiser."""
     boundary = apply_cnn(layers, params, x, start=0, stop=split_index,
-                         backend=backend)
+                         backend=backend, dtype=dtype)
     logits = apply_cnn(layers, params, boundary, start=split_index,
-                       backend=backend)
+                       backend=backend, dtype=dtype)
     return logits, boundary

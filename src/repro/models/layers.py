@@ -15,7 +15,7 @@ documented in DESIGN.md section 9: RWKV6 uses static token-shift lerp
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.costs import LayerProfile, ModelProfile
+from repro.core.dtype_policy import conv_dtype
+from repro.core.dtype_policy import dtype_bytes as policy_bytes
 from repro.models import cnn as cnn_lib
 
 
@@ -20,8 +22,21 @@ from repro.models import cnn as cnn_lib
 # Paper CNNs
 # ---------------------------------------------------------------------------
 def cnn_profile(name: str, batch: int = 1,
-                dtype_bytes: int = cnn_lib.DTYPE_BYTES,
-                in_shape: tuple = cnn_lib.INPUT_SHAPE) -> ModelProfile:
+                dtype_bytes: int | None = None,
+                in_shape: tuple = cnn_lib.INPUT_SHAPE,
+                dtype: str | None = None) -> ModelProfile:
+    """Analytic profile under a storage-dtype policy.
+
+    ``dtype`` (``fp32`` | ``bf16``; default resolves ``REPRO_CONV_DTYPE``)
+    scales every byte term -- weights, activations, boundary payloads, the
+    input upload -- so NSGA-II/TOPSIS sees the memory and transfer costs
+    the bf16 execution path actually incurs.  ``dtype_bytes`` overrides
+    the per-element size directly (back-compat escape hatch)."""
+    policy = conv_dtype(dtype)
+    if dtype_bytes is None:
+        dtype_bytes = policy_bytes(policy)
+    else:
+        policy = {4: "fp32", 2: "bf16"}.get(dtype_bytes, policy)
     layers = cnn_lib.CNN_MODELS[name]
     shapes = cnn_lib.shapes_through(layers, in_shape)
     profs = []
@@ -36,7 +51,8 @@ def cnn_profile(name: str, batch: int = 1,
         shape = out_shape
     return ModelProfile(
         name=name, layers=tuple(profs),
-        input_bytes=float(np.prod(in_shape)) * dtype_bytes * batch)
+        input_bytes=float(np.prod(in_shape)) * dtype_bytes * batch,
+        dtype=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -88,4 +104,7 @@ def transformer_profile(cfg, *, seq_len: int, batch: int,
         state_bytes=last.state_bytes)
     input_bytes = float(batch * (seq_len if mode == "prefill" else 1)) * 4
     return ModelProfile(name=f"{cfg.name}:{mode}", layers=tuple(profs),
-                        input_bytes=max(input_bytes, 1.0))
+                        input_bytes=max(input_bytes, 1.0),
+                        dtype={4: "fp32", 2: "bf16"}.get(dtype_bytes,
+                                                         "fp32"),
+                        input_follows_dtype=False)   # int32 token ids

@@ -16,8 +16,6 @@ For frontend archs the embeddings REPLACE token embedding for the first P
 positions (vision patches / audio frames) -- the stub carve-out."""
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

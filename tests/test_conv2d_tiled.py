@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.conv2d import (DEFAULT_VMEM_BUDGET, VMEM_LIMIT_BYTES,
                                   choose_tile_h, conv2d, conv_vmem_bytes,
                                   plan_conv)

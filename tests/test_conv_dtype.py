@@ -1,0 +1,369 @@
+"""bf16-storage / fp32-accumulate conv path: policy resolution, kernel
+parity at relaxed tolerance on every AlexNet/VGG16 conv (+ fused pool
+triple) shape, planner VMEM headroom, boundary-payload serialization, and
+the dtype-aware cost model steering NSGA-II/TOPSIS.
+
+Everything runs in interpret mode on CPU; full-resolution shapes whose
+conv exceeds ~2e8 MACs are marked ``slow`` (tier-1 runs ``-m "not slow"``)
+but still pass under a plain ``pytest`` run."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_ENV_J6, evaluate_objectives, feasible_mask,
+                        latency_terms, smartsplit_exhaustive)
+from repro.core.dtype_policy import (CONV_DTYPES, conv_dtype, dtype_bytes,
+                                     policy_jnp_dtype)
+from repro.kernels import ops, ref
+from repro.kernels.conv2d import DEFAULT_VMEM_BUDGET, plan_conv
+from repro.models import cnn
+from repro.models.profiles import cnn_profile
+
+KEY = jax.random.PRNGKey(0)
+
+# bf16 stores ~8 mantissa bits: with the fp32 accumulator the error is
+# input/weight rounding only, well inside 2e-2 for O(1) activations.
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _assert_bf16_close(got, want):
+    """2e-2 max-abs in units of the output scale (relative where the
+    reduction makes activations O(10): a near-zero element of a 3456-term
+    dot sees the other elements' rounding without their magnitude)."""
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want)
+    scale = max(1.0, float(np.max(np.abs(want))))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2 * scale)
+
+
+def _inputs(n, cin, hw, cout, k, scale=0.3):
+    x = jax.random.normal(KEY, (n, cin, hw, hw)) * scale
+    w = jax.random.normal(jax.random.fold_in(KEY, 1),
+                          (cout, cin, k, k)) * 0.2
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (cout,)) * 0.1
+    return x, w, b
+
+
+def _ref_fp32(x, w, b, *, stride, pad, act, pool_k=0, pool_s=0):
+    y = ref.conv2d_ref(x, w, stride=stride, pad=pad, bias=b, activation=act)
+    if pool_k:
+        y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                  (1, 1, pool_k, pool_k),
+                                  (1, 1, pool_s, pool_s), "VALID")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution
+# ---------------------------------------------------------------------------
+def test_dtype_env_and_arg_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_CONV_DTYPE", raising=False)
+    assert conv_dtype() == "fp32"
+    monkeypatch.setenv("REPRO_CONV_DTYPE", "bf16")
+    assert conv_dtype() == "bf16"
+    assert conv_dtype("fp32") == "fp32"       # explicit arg wins
+    monkeypatch.setenv("REPRO_CONV_DTYPE", "fp8-magic")
+    with pytest.raises(ValueError):
+        conv_dtype()
+    with pytest.raises(ValueError):
+        conv_dtype("int4")
+
+
+def test_dtype_bytes_and_jnp_dtype():
+    assert [dtype_bytes(d) for d in CONV_DTYPES] == [4, 2]
+    assert policy_jnp_dtype("fp32") == jnp.float32
+    assert policy_jnp_dtype("bf16") == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: every AlexNet/VGG16 conv (+ fused pool triple) shape
+# ---------------------------------------------------------------------------
+def _conv_specs():
+    """Every AlexNet/VGG16 conv (+ fused pool triple) shape, from the same
+    enumeration the dtype-sweep benchmark uses."""
+    from benchmarks.kernels_bench import model_conv_specs
+    return [s for m in ("alexnet", "vgg16") for s in model_conv_specs(m)]
+
+
+def _shape_params():
+    params = []
+    for name, cin, hw, cout, k, s, p, act, pk, ps in _conv_specs():
+        macs = k * k * cin * cout * hw * hw
+        marks = [pytest.mark.slow] if macs > 2e8 else []
+        params.append(pytest.param(
+            (cin, hw, cout, k, s, p, act, pk, ps), marks=marks,
+            id=f"{name}-{cin}x{hw}-{cout}c{k}s{s}p{pk}_{ps}"))
+    return params
+
+
+@pytest.mark.parametrize("spec", _shape_params())
+def test_bf16_parity_model_shapes(spec):
+    """Acceptance: bf16 storage matches the fp32 XLA reference within
+    2e-2 max-abs on every AlexNet/VGG16 conv and fused pool-triple shape,
+    and the bf16 launch returns bfloat16 storage."""
+    cin, hw, cout, k, s, p, act, pk, ps = spec
+    x, w, b = _inputs(1, cin, hw, cout, k)
+    got = ops.conv2d(x, w, stride=s, pad=p, bias=b, activation=act,
+                     pool_k=pk, pool_s=ps, dtype="bf16")
+    assert got.dtype == jnp.bfloat16
+    want = _ref_fp32(x, w, b, stride=s, pad=p, act=act, pool_k=pk,
+                     pool_s=ps)
+    assert got.shape == want.shape
+    _assert_bf16_close(got, want)
+
+
+@pytest.mark.parametrize("k,stride,pad,pk,ps", [
+    (3, 1, 1, 0, 0), (3, 1, 1, 2, 2), (5, 1, 2, 3, 2), (11, 4, 2, 3, 2),
+])
+def test_bf16_parity_geometry_small(k, stride, pad, pk, ps):
+    """The paper models' distinct conv/pool geometries at small channels
+    and resolution, so tier-1 covers the bf16 halo/pool path cheaply."""
+    hw = 31 if k > 5 else 23
+    x, w, b = _inputs(2, 6, hw, 8, k, scale=0.4)
+    got = ops.conv2d(x, w, stride=stride, pad=pad, bias=b,
+                     activation="relu", pool_k=pk, pool_s=ps, dtype="bf16")
+    want = _ref_fp32(x, w, b, stride=stride, pad=pad, act="relu",
+                     pool_k=pk, pool_s=ps)
+    np.testing.assert_allclose(np.asarray(got.astype(jnp.float32)),
+                               np.asarray(want), **BF16_TOL)
+
+
+# ---------------------------------------------------------------------------
+# Planner: bf16 buys VMEM headroom (bigger tiles, fewer launches)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec",
+                         [pytest.param(s, id=s[0]) for s in _conv_specs()])
+def test_planner_bf16_headroom(spec):
+    """Acceptance: for every AlexNet/VGG16 conv shape the bf16 plan fits
+    the budget with tile_h >= the fp32 plan's (and no more launches)."""
+    name, cin, hw, cout, k, s, p, act, pk, ps = spec
+    plans = {}
+    for nbytes in (4, 2):
+        plans[nbytes] = plan_conv((1, cin, hw, hw), (cout, cin, k, k),
+                                  stride=s, pad=p, pool_k=pk, pool_s=ps,
+                                  dtype_bytes=nbytes)
+        assert plans[nbytes].vmem_bytes <= DEFAULT_VMEM_BUDGET, (name,
+                                                                 nbytes)
+    assert plans[2].tile_h >= plans[4].tile_h, name
+    assert plans[2].n_h_blocks <= plans[4].n_h_blocks, name
+
+
+def test_planner_bf16_fewer_launches_vgg16_early():
+    """Acceptance: on the VGG16 early layers the doubled headroom must
+    actually reduce launch counts, and the same-tile VMEM saving is at
+    least 1.5x (the fp32 accumulator caps it below 2x)."""
+    from benchmarks.kernels_bench import dtype_plan_stats, model_conv_specs
+    early = model_conv_specs("vgg16")[:3]          # conv1-conv3
+    reduced = []
+    for name, cin, hw, cout, k, s, p, act, pk, ps in early:
+        stats = dtype_plan_stats(cin, hw, cout, k, s, p, pk, ps)
+        assert stats["vmem_per_tile_ratio"] >= 1.5, (name, stats)
+        assert stats["bf16"]["launches"] <= stats["fp32"]["launches"]
+        reduced.append(stats["bf16"]["launches"] < stats["fp32"]["launches"])
+    assert any(reduced), "bf16 reduced no VGG16 early-layer launch count"
+
+
+def test_conv2d_passes_storage_itemsize_to_planner(monkeypatch):
+    """ops.conv2d under bf16 must hand the planner 2-byte elements -- the
+    executed grid uses the bf16 plan, not the fp32 one (observed via a
+    plan_conv spy; the shape is unique so the jit cache cannot serve a
+    stale trace that skips planning)."""
+    from repro.kernels import conv2d as conv2d_mod
+    seen = []
+    real_plan = conv2d_mod.plan_conv
+
+    def spy(x_shape, w_shape, **kw):
+        seen.append(kw.get("dtype_bytes"))
+        return real_plan(x_shape, w_shape, **kw)
+
+    monkeypatch.setattr(conv2d_mod, "plan_conv", spy)
+    x, w, b = _inputs(1, 8, 61, 8, 3)
+    got = ops.conv2d(x, w, stride=1, pad=1, bias=b, dtype="bf16")
+    assert seen and seen[-1] == 2
+    want = _ref_fp32(x, w, b, stride=1, pad=1, act=None)
+    np.testing.assert_allclose(np.asarray(got.astype(jnp.float32)),
+                               np.asarray(want), **BF16_TOL)
+    # and the headroom is real for a shape the fp32 plan cannot tile as
+    # coarsely
+    p32 = plan_conv((1, 64, 224, 224), (64, 64, 3, 3), stride=1, pad=1,
+                    dtype_bytes=4)
+    p16 = plan_conv((1, 64, 224, 224), (64, 64, 3, 3), stride=1, pad=1,
+                    dtype_bytes=2)
+    assert p16.tile_h > p32.tile_h and p16.n_h_blocks < p32.n_h_blocks
+
+
+# ---------------------------------------------------------------------------
+# Model walk + split boundary serialization
+# ---------------------------------------------------------------------------
+_TINY = [cnn.conv(8, 3, 1, 1), cnn.relu(), cnn.maxpool(2, 2),
+         cnn.conv(16, 3, 2, 1), cnn.relu6(),
+         cnn.conv(16, 1, 1, 0),
+         cnn.avgpool(2), cnn.linear(10)]
+_TINY_IN = (3, 16, 16)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_apply_cnn_bf16_matches_fp32(backend):
+    params = cnn.init_cnn(jax.random.PRNGKey(3), _TINY, _TINY_IN)
+    x = jax.random.normal(KEY, (2,) + _TINY_IN) * 0.5
+    want = cnn.apply_cnn(_TINY, params, x, backend=backend)
+    got = cnn.apply_cnn(_TINY, params, x, backend=backend, dtype="bf16")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got.astype(jnp.float32)),
+                               np.asarray(want), rtol=5e-2, atol=5e-2)
+
+
+def test_backends_agree_under_bf16():
+    params = cnn.init_cnn(jax.random.PRNGKey(3), _TINY, _TINY_IN)
+    x = jax.random.normal(KEY, (2,) + _TINY_IN) * 0.5
+    a = cnn.apply_cnn(_TINY, params, x, backend="xla", dtype="bf16")
+    b = cnn.apply_cnn(_TINY, params, x, backend="pallas", dtype="bf16")
+    np.testing.assert_allclose(np.asarray(a.astype(jnp.float32)),
+                               np.asarray(b.astype(jnp.float32)),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_env_var_routes_dtype(monkeypatch):
+    params = cnn.init_cnn(jax.random.PRNGKey(3), _TINY, _TINY_IN)
+    x = jax.random.normal(KEY, (1,) + _TINY_IN) * 0.5
+    monkeypatch.delenv("REPRO_CONV_DTYPE", raising=False)
+    assert cnn.apply_cnn(_TINY, params, x).dtype == jnp.float32
+    monkeypatch.setenv("REPRO_CONV_DTYPE", "bf16")
+    assert cnn.apply_cnn(_TINY, params, x).dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("split", range(1, len(_TINY)))
+def test_split_boundary_serialized_in_policy_dtype(split):
+    """Acceptance: under bf16 the boundary payload crosses the link as
+    bfloat16 with exactly the byte count the dtype-aware profile charges,
+    and the split logits still match the fp32 monolithic run."""
+    params = cnn.init_cnn(jax.random.PRNGKey(3), _TINY, _TINY_IN)
+    x = jax.random.normal(KEY, (1,) + _TINY_IN) * 0.5
+    full = cnn.apply_cnn(_TINY, params, x)                # fp32 reference
+    logits, boundary = cnn.apply_split(_TINY, params, x, split,
+                                       backend="pallas", dtype="bf16")
+    assert boundary.dtype == jnp.bfloat16
+    lx, bx = cnn.apply_split(_TINY, params, x, split, backend="xla",
+                             dtype="bf16")
+    assert bx.dtype == jnp.bfloat16 and bx.shape == boundary.shape
+    np.testing.assert_allclose(np.asarray(logits.astype(jnp.float32)),
+                               np.asarray(full), rtol=5e-2, atol=5e-2)
+
+
+def test_coc_split_uploads_policy_dtype_input():
+    """Degenerate l1=0 (COC): the boundary IS the input, and it must be
+    serialized in the policy dtype with exactly the profile's input_bytes
+    -- the storage invariant starts before the first layer."""
+    in_shape = (3, 64, 64)
+    layers = cnn.CNN_MODELS["alexnet"][:4]
+    params = cnn.init_cnn(jax.random.PRNGKey(0), layers, in_shape)
+    x = jax.random.normal(KEY, (1,) + in_shape) * 0.3
+    _, boundary = cnn.apply_split(layers, params, x, 0, dtype="bf16")
+    assert boundary.dtype == jnp.bfloat16
+    p16 = cnn_profile("alexnet", in_shape=in_shape, dtype="bf16")
+    assert boundary.size * boundary.dtype.itemsize == p16.boundary()[0]
+
+
+def test_split_boundary_bytes_match_bf16_profile():
+    """Execution vs analytic profile: boundary.size * 2 == I|l1 at bf16,
+    half the fp32 figure, on a real paper model prefix."""
+    layers = cnn.CNN_MODELS["alexnet"]
+    in_shape = (3, 64, 64)
+    params = cnn.init_cnn(jax.random.PRNGKey(0), layers[:4], in_shape)
+    x = jax.random.normal(KEY, (1,) + in_shape) * 0.3
+    for l1 in (1, 3):
+        _, boundary = cnn.apply_split(layers[:4], params, x, l1,
+                                      dtype="bf16")
+        p16 = cnn_profile("alexnet", in_shape=in_shape, dtype="bf16")
+        p32 = cnn_profile("alexnet", in_shape=in_shape, dtype="fp32")
+        assert boundary.dtype == jnp.bfloat16
+        assert boundary.size * 2 == p16.boundary()[l1]
+        assert 2 * p16.boundary()[l1] == p32.boundary()[l1]
+
+
+# ---------------------------------------------------------------------------
+# Dtype-aware cost model -> optimiser
+# ---------------------------------------------------------------------------
+def test_profile_terms_scale_with_dtype():
+    p32 = cnn_profile("vgg16")
+    p16 = cnn_profile("vgg16", dtype="bf16")
+    assert (p32.dtype, p16.dtype) == ("fp32", "bf16")
+    np.testing.assert_allclose(p16.cum_mem(), p32.cum_mem() * 0.5)
+    np.testing.assert_allclose(p16.boundary(), p32.boundary() * 0.5)
+    np.testing.assert_allclose(p16.cum_flops(), p32.cum_flops())
+    # with_dtype round-trips between the two profiles
+    np.testing.assert_allclose(p32.with_dtype("bf16").boundary(),
+                               p16.boundary())
+    np.testing.assert_allclose(p16.with_dtype("fp32").cum_mem(),
+                               p32.cum_mem())
+
+
+def test_with_dtype_keeps_token_input_bytes_fixed():
+    """Transformer profiles upload int32 token ids at l1=0: re-profiling
+    under another storage policy must rescale weights/activations but
+    leave the policy-independent input payload alone."""
+    from repro.configs import all_configs
+    from repro.models.profiles import transformer_profile
+    cfg = all_configs()["qwen3-4b"].reduced()
+    prof = transformer_profile(cfg, seq_len=8, batch=2, mode="prefill")
+    assert prof.dtype == "bf16" and not prof.input_follows_dtype
+    up = prof.with_dtype("fp32")
+    assert up.input_bytes == prof.input_bytes       # token ids unchanged
+    np.testing.assert_allclose(up.cum_mem(), prof.cum_mem() * 2)
+    np.testing.assert_allclose(up.boundary()[1:], prof.boundary()[1:] * 2)
+
+
+def test_transfer_and_memory_objectives_scale():
+    """core/costs: the upload-latency and client-memory terms (the two
+    byte-dominated objectives) halve under bf16."""
+    p32 = cnn_profile("vgg16")
+    p16 = p32.with_dtype("bf16")
+    _, up32, _, _ = latency_terms(p32, PAPER_ENV_J6)
+    _, up16, _, _ = latency_terms(p16, PAPER_ENV_J6)
+    np.testing.assert_allclose(up16, up32 * 0.5)
+    F32 = evaluate_objectives(p32, PAPER_ENV_J6)
+    F16 = evaluate_objectives(p16, PAPER_ENV_J6)
+    np.testing.assert_allclose(F16[:, 2], F32[:, 2] * 0.5)
+    assert np.all(F16[1:-1, 0] < F32[1:-1, 0])      # latency strictly drops
+
+
+def test_optimizer_picks_different_split_under_bf16():
+    """Acceptance: with a client memory budget that binds at fp32, the
+    bf16 policy unlocks later splits and NSGA-II/TOPSIS (exhaustive
+    ground truth) picks a different split index with a better memory
+    objective."""
+    p32 = cnn_profile("vgg16")
+    p16 = p32.with_dtype("bf16")
+    free = smartsplit_exhaustive(p32, PAPER_ENV_J6)
+    mem_free = evaluate_objectives(p32, PAPER_ENV_J6)[free.split_index, 2]
+    client = dataclasses.replace(PAPER_ENV_J6.client,
+                                 memory_budget=mem_free * 0.5)
+    hw = dataclasses.replace(PAPER_ENV_J6, client=client)
+    s32 = smartsplit_exhaustive(p32, hw)
+    s16 = smartsplit_exhaustive(p16, hw)
+    assert feasible_mask(p16, hw).sum() > feasible_mask(p32, hw).sum()
+    assert s16.split_index != s32.split_index
+    assert s16.split_index > s32.split_index      # deeper on-device prefix
+    assert s16.objectives[2] <= hw.client.memory_budget
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke contract (keeps the CI bench gate honest)
+# ---------------------------------------------------------------------------
+def test_dtype_sweep_smoke_emits_artifact(tmp_path, monkeypatch):
+    from benchmarks import common, kernels_bench
+    monkeypatch.setattr(common, "OUT_DIR", str(tmp_path))
+    rows = kernels_bench.dtype_sweep_report(smoke=True)
+    assert any(name == "kernels.dtype_sweep.json" for name, _, _ in rows)
+    import json
+    with open(tmp_path / "BENCH_dtype_sweep_smoke.json") as f:
+        payload = json.load(f)
+    assert payload["smoke"] is True
+    for e in payload["entries"]:
+        assert e["vmem_per_tile_ratio"] >= 1.5
+        assert e["max_abs_err_bf16"] < 2e-2
+        assert {"tile_h", "launches", "vmem_bytes_per_tile"} \
+            <= set(e["fp32"])

@@ -243,7 +243,7 @@ def test_full_model_walk_fuses_every_triple(model, monkeypatch):
     calls = []
 
     def fake_conv2d(x, w, b, stride, pad, groups=1, activation=None,
-                    pool_k=0, pool_s=0, backend=None):
+                    pool_k=0, pool_s=0, backend=None, dtype=None):
         calls.append((activation, pool_k, pool_s))
         n, _, h, wd = x.shape
         cout, _, k, _ = w.shape

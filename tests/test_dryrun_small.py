@@ -2,7 +2,6 @@
 param/batch/cache structs, lowering, compile, cost extraction and the
 loop-cost extrapolation for one arch of each loop depth.  Subprocess with 8
 devices; the production 512-device sweep runs via launch/dryrun.py."""
-import json
 import os
 import subprocess
 import sys

@@ -1,11 +1,8 @@
 """Multi-cut (K-tier chain) SmartSplit: correctness vs brute force on small
 instances, constraint enforcement, and reduction to the 2-tier case."""
-import itertools
-
 import numpy as np
-import pytest
 
-from repro.core.hardware import (DCN_LINK, PAPER_ENV_J6, TwoTierHardware,
+from repro.core.hardware import (DCN_LINK, TwoTierHardware,
                                  tpu_pod_tier)
 from repro.core.multicut import (ChainHardware, evaluate_multicut,
                                  smartsplit_multicut)

@@ -8,7 +8,6 @@ from repro.core import (PAPER_ENV_J6, PAPER_ENV_NOTE8, TPU_EDGE_CLOUD,
                         lbo, mbo, rs, smartsplit, smartsplit_exhaustive,
                         total_energy, total_latency)
 from repro.core.costs import check_profile
-from repro.core.nsga2 import NSGA2Config
 from repro.models.profiles import cnn_profile
 
 MODELS = ["alexnet", "vgg11", "vgg13", "vgg16", "mobilenetv2"]

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, checkpointing, data pipeline, serving
 engine, HLO collective parser."""
 import dataclasses
-import math
 import tempfile
 
 import jax

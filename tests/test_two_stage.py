@@ -39,6 +39,15 @@ SCRIPT = textwrap.dedent("""
                             microbatches=2)
     np.testing.assert_allclose(np.asarray(piped), np.asarray(mono),
                                rtol=2e-3, atol=2e-3)
+    if not cfg.num_experts:
+        # bf16 boundary policy: the ppermuted activation crosses the link
+        # as bfloat16 (MoE is excluded: a rounded hidden state can flip
+        # near-tie router decisions, which is a semantic change, not noise)
+        for kwargs in ({{}}, {{"pipelined": True, "microbatches": 2}}):
+            b16 = two_stage_apply(cfg, params, toks, mesh, 2,
+                                  boundary_dtype="bf16", **kwargs)
+            np.testing.assert_allclose(np.asarray(b16), np.asarray(mono),
+                                       rtol=5e-2, atol=5e-2)
     print("TWO_STAGE_OK {arch}")
 """)
 
