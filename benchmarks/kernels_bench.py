@@ -4,12 +4,15 @@ utilisation each BlockSpec tiling would claim on v5e."""
 from __future__ import annotations
 
 import functools
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import save_json, time_us
+from benchmarks.common import ensure_out, save_json, time_us
 from repro.core.hardware import V5E_PEAK_FLOPS_BF16
+from repro.kernels import conv2d as conv2d_mod
 from repro.kernels import ops, ref
 from repro.kernels.conv2d import conv_vmem_bytes, plan_conv
 
@@ -140,8 +143,9 @@ def dtype_plan_stats(cin: int, hw: int, cout: int, K: int, stride: int,
                          pool_k=pool_k, pool_s=pool_s, dtype_bytes=nbytes)
         plans[policy] = plan
         stats[policy] = {
-            "tile_h": plan.tile_h, "n_h_blocks": plan.n_h_blocks,
-            "launches": batch * (cout // plan.block_co) * plan.n_h_blocks,
+            "tile_h": plan.tile_h, "tile_w": plan.tile_w,
+            "n_h_blocks": plan.n_h_blocks, "n_w_blocks": plan.n_w_blocks,
+            "launches": plan.launches,
             "vmem_bytes_per_tile": plan.vmem_bytes,
             "out_bytes": batch * cout * plan.p_out * plan.pw_out * nbytes,
         }
@@ -150,7 +154,8 @@ def dtype_plan_stats(cin: int, hw: int, cout: int, K: int, stride: int,
         cin_block=p32.cin_block, block_co=p32.block_co, tile_h=p32.tile_h,
         w_in=hw + 2 * pad, w_out=p32.w_out, K=K, stride=stride,
         cin_per_group=cin, dtype_bytes=2, pool_k=p32.pool_k,
-        pool_s=p32.pool_s)
+        pool_s=p32.pool_s,
+        tile_w=p32.tile_w if p32.n_w_blocks > 1 else 0)
     stats["vmem_bytes_bf16_at_fp32_tile"] = same_tile
     stats["vmem_per_tile_ratio"] = p32.vmem_bytes / same_tile
     stats["launch_ratio"] = (stats["fp32"]["launches"]
@@ -241,6 +246,219 @@ def dtype_sweep_report(smoke: bool = False) -> list[tuple]:
     return rows
 
 
+def _plan_stats(plan) -> dict:
+    """The comparable numbers of one ConvPlan for the tiling JSONs."""
+    return {"block_co": plan.block_co, "tile_h": plan.tile_h,
+            "tile_w": plan.tile_w, "n_h_blocks": plan.n_h_blocks,
+            "n_w_blocks": plan.n_w_blocks, "launches": plan.launches,
+            "vmem_bytes": plan.vmem_bytes, "cost_bytes": plan.cost_bytes}
+
+
+# Wide-input client workloads (1080p camera frame, panoramic strips) the
+# paper's smartphone setting implies.  The two *_row_buster strips keep H
+# small so interpret mode stays tractable, but their single output row
+# overflows the 12 MiB budget: ValueError on the greedy planner, runnable
+# only with column tiles.
+_WIDE_SPECS = [
+    # name, cin, H, W, cout, K, stride, pad, act, pool_k, pool_s
+    ("hd1080_conv1", 3, 1080, 1920, 64, 3, 1, 1, "relu", 0, 0),
+    ("pano512x2048_conv1", 3, 512, 2048, 64, 11, 4, 2, "relu", 3, 2),
+    ("strip7680_row_buster", 64, 16, 7680, 64, 3, 1, 1, "relu", 0, 0),
+    ("strip6144_pool_row_buster", 64, 17, 6144, 64, 3, 1, 1, "relu", 2, 2),
+]
+
+# Smoke twins: one wide shape per conv family (plain conv, fused pool
+# triple) shrunk so CI exercises column tiling in seconds.  The tiny
+# explicit VMEM budget is what makes a 96-px row "wide": the greedy
+# row-only planner raises on it, the search splits columns.
+_SMOKE_WIDE_BUDGET = 40 * 1024
+_SMOKE_WIDE_SPECS = [
+    ("smoke_wide_conv", 8, 12, 96, 16, 3, 1, 1, "relu", 0, 0),
+    ("smoke_wide_triple", 8, 13, 96, 16, 3, 1, 1, "relu", 2, 2),
+]
+
+
+def tiling_search_report(smoke: bool = False) -> list[tuple]:
+    """Greedy-vs-joint-search planner comparison plus the wide-input sweep.
+
+    Full mode: every AlexNet/VGG16/MobileNetV2 conv shape at fp32 and
+    bf16 -- launch counts, per-tile VMEM, cost-model bytes, and
+    interpret-mode wall time (relative only) for both planners -- plus
+    the ``_WIDE_SPECS`` high-resolution shapes, recording which ones the
+    greedy planner rejects outright and the parity of the column-tiled
+    kernel against ``ref.conv2d_ref``.  Smoke mode runs the two tiny
+    wide shapes under a 40 KiB budget so CI exercises column tiling on
+    every push.  Emits BENCH_tiling_search{_smoke}.json."""
+    key = jax.random.PRNGKey(11)
+    rows, entries, wide = [], [], []
+    if not smoke:
+        specs = [s for m in ("alexnet", "vgg16", "mobilenetv2")
+                 for s in model_conv_specs(m)]
+        for name, cin, hw, cout, K, s, p, act, pk, ps in specs:
+            x = jax.random.normal(key, (1, cin, hw, hw), jnp.float32) * 0.3
+            w = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (cout, cin, K, K), jnp.float32) * 0.1
+            b = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (cout,), jnp.float32) * 0.1
+            entry = {"name": name,
+                     "shape": {"cin": cin, "hw": hw, "cout": cout, "K": K,
+                               "stride": s, "pad": p, "act": act,
+                               "pool_k": pk, "pool_s": ps}}
+            for policy, nbytes in (("fp32", 4), ("bf16", 2)):
+                cmp, plans = {}, {}
+                for mode, searched in (("greedy", False), ("search", True)):
+                    plans[mode] = _plan_stats(plan_conv(
+                        (1, cin, hw, hw), (cout, cin, K, K),
+                        stride=s, pad=p, pool_k=pk, pool_s=ps,
+                        dtype_bytes=nbytes, search=searched))
+                    st = dict(plans[mode])
+                    if mode == "search" and plans["search"] == \
+                            plans["greedy"]:
+                        # identical plan: reuse the greedy measurement
+                        st["us"] = cmp["greedy"]["us"]
+                    else:
+                        st["us"] = time_us(
+                            lambda se=searched, po=policy:
+                            jax.block_until_ready(ops.conv2d(
+                                x, w, stride=s, pad=p, bias=b,
+                                activation=act, pool_k=pk, pool_s=ps,
+                                dtype=po, search=se)),
+                            repeats=1)
+                    cmp[mode] = st
+                entry[policy] = cmp
+            entries.append(entry)
+            f32 = entry["fp32"]
+            rows.append((
+                f"kernels.tiling_search.{name}", f32["search"]["us"],
+                f"greedy_us={f32['greedy']['us']:.1f} "
+                f"launches={f32['greedy']['launches']}->"
+                f"{f32['search']['launches']} "
+                f"tile={f32['search']['tile_h']}x{f32['search']['tile_w']} "
+                f"bc={f32['search']['block_co']}"))
+
+    wide_specs = _SMOKE_WIDE_SPECS if smoke else _WIDE_SPECS
+    budget = _SMOKE_WIDE_BUDGET if smoke \
+        else conv2d_mod.DEFAULT_VMEM_BUDGET
+    for name, cin, H, W, cout, K, s, p, act, pk, ps in wide_specs:
+        x = jax.random.normal(key, (1, cin, H, W), jnp.float32) * 0.3
+        w = jax.random.normal(jax.random.fold_in(key, 3),
+                              (cout, cin, K, K), jnp.float32) * 0.1
+        b = jax.random.normal(jax.random.fold_in(key, 4),
+                              (cout,), jnp.float32) * 0.1
+        entry = {"name": name,
+                 "shape": {"cin": cin, "H": H, "W": W, "cout": cout,
+                           "K": K, "stride": s, "pad": p, "act": act,
+                           "pool_k": pk, "pool_s": ps},
+                 "vmem_budget": budget}
+        try:
+            entry["greedy_fp32"] = _plan_stats(plan_conv(
+                x.shape, w.shape, stride=s, pad=p, pool_k=pk, pool_s=ps,
+                vmem_budget=budget, search=False))
+        except ValueError as e:
+            entry["greedy_fp32"] = {"error": str(e)}
+        for policy, nbytes in (("fp32", 4), ("bf16", 2)):
+            entry[f"search_{policy}"] = _plan_stats(plan_conv(
+                x.shape, w.shape, stride=s, pad=p, pool_k=pk, pool_s=ps,
+                dtype_bytes=nbytes, vmem_budget=budget, search=True))
+        # execute the searched fp32 plan once (interpret mode is slow on
+        # these shapes): the same run provides the timing and the parity
+        got = None
+
+        def run_wide():
+            nonlocal got
+            got = jax.block_until_ready(conv2d_mod.conv2d(
+                x, w, stride=s, pad=p, bias=b, activation=act,
+                pool_k=pk, pool_s=ps, vmem_budget=budget, search=True))
+
+        us = time_us(run_wide, repeats=1, warmup=0)
+        want = ref.conv2d_ref(x, w, stride=s, pad=p, bias=b,
+                              activation=act)
+        if pk:
+            want = jax.lax.reduce_window(
+                want, -jnp.inf, jax.lax.max, (1, 1, pk, pk),
+                (1, 1, ps, ps), "VALID")
+        entry["us"] = us
+        entry["max_abs_err"] = float(jnp.max(jnp.abs(got - want)))
+        wide.append(entry)
+        sp = entry["search_fp32"]
+        rows.append((
+            f"kernels.tiling_search.wide.{name}", us,
+            f"greedy={'raises' if 'error' in entry['greedy_fp32'] else 'ok'}"
+            f" grid={sp['n_h_blocks']}x{sp['n_w_blocks']}"
+            f" tile={sp['tile_h']}x{sp['tile_w']}"
+            f" max_abs_err={entry['max_abs_err']:.3e}"))
+
+    fname = "BENCH_tiling_search_smoke.json" if smoke \
+        else "BENCH_tiling_search.json"
+    totals = {"n_shapes": len(entries), "n_wide": len(wide),
+              "wide_greedy_rejected": sum(
+                  1 for e in wide if "error" in e["greedy_fp32"]),
+              "max_wide_abs_err": max(
+                  (e["max_abs_err"] for e in wide), default=0.0)}
+    for policy in ("fp32", "bf16"):
+        totals[f"launches_greedy_{policy}"] = sum(
+            e[policy]["greedy"]["launches"] for e in entries)
+        totals[f"launches_search_{policy}"] = sum(
+            e[policy]["search"]["launches"] for e in entries)
+        totals[f"n_reduced_{policy}"] = sum(
+            e[policy]["search"]["launches"] < e[policy]["greedy"]["launches"]
+            for e in entries)
+    path = save_json("", fname, {"smoke": smoke, "entries": entries,
+                                 "wide": wide, "totals": totals})
+    rows.append(("kernels.tiling_search.json", None, path))
+    return rows
+
+
+def kernel_summary_report(smoke: bool = False) -> list[tuple]:
+    """Aggregate the kernel JSON artefacts of this run into one stable
+    headline series, BENCH_kernel_summary{_smoke}.json: total launches
+    (greedy vs search, fp32 vs bf16), max per-tile VMEM, fused-vs-unfused
+    and dtype aggregates.  Sections whose artefact is absent (e.g. the
+    fusion report has no smoke variant) are skipped, so the summary is
+    emittable from both the full bench and the CI smoke gate."""
+    sfx = "_smoke" if smoke else ""
+    out_dir = ensure_out("")
+
+    def load(name):
+        p = os.path.join(out_dir, name)
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return json.load(f)
+
+    summary = {"smoke": smoke, "sections": {}}
+    fusion = load("BENCH_conv_fusion.json") if not smoke else None
+    if fusion:
+        ratios = sorted(t["unfused_us"] / t["fused_us"]
+                        for t in fusion["triples"] if t["fused_us"])
+        summary["sections"]["conv_fusion"] = {
+            **fusion["totals"],
+            "median_unfused_over_fused_us": ratios[len(ratios) // 2],
+        }
+    dtype = load(f"BENCH_dtype_sweep{sfx}.json")
+    if dtype:
+        summary["sections"]["dtype_sweep"] = dict(dtype["totals"])
+    tiling = load(f"BENCH_tiling_search{sfx}.json")
+    if tiling:
+        sec = dict(tiling["totals"])
+        vmems = [e[p]["search"]["vmem_bytes"]
+                 for e in tiling["entries"] for p in ("fp32", "bf16")] + \
+                [e["search_fp32"]["vmem_bytes"] for e in tiling["wide"]]
+        sec["max_vmem_bytes_per_tile"] = max(vmems, default=0)
+        summary["sections"]["tiling_search"] = sec
+    head = {}
+    ts = summary["sections"].get("tiling_search", {})
+    if ts:
+        head["total_launches_greedy_fp32"] = ts.get("launches_greedy_fp32")
+        head["total_launches_search_fp32"] = ts.get("launches_search_fp32")
+        head["total_launches_search_bf16"] = ts.get("launches_search_bf16")
+        head["max_vmem_bytes_per_tile"] = ts.get("max_vmem_bytes_per_tile")
+        head["wide_shapes_unlocked"] = ts.get("wide_greedy_rejected")
+    summary["headline"] = head
+    path = save_json("", f"BENCH_kernel_summary{sfx}.json", summary)
+    return [("kernels.summary.json", None, path)]
+
+
 def run_smoke() -> list[tuple]:
     """One tiny shape per kernel family, in seconds: the CI bench-smoke
     gate that keeps the bench path itself from rotting."""
@@ -249,6 +467,9 @@ def run_smoke() -> list[tuple]:
 
     # conv family (tiled kernel + fused triple + dtype sweep JSON)
     rows += dtype_sweep_report(smoke=True)
+
+    # wide-input column tiling (one shape per conv family, tiny budget)
+    rows += tiling_search_report(smoke=True)
 
     # flash attention: one 128-token tile pair
     B, S, H, KV, hd = 1, 128, 2, 1, 64
@@ -376,6 +597,9 @@ def run_all(smoke: bool = False) -> list[tuple]:
 
     # fp32 vs bf16 storage sweep (planner + parity) + BENCH_dtype_sweep
     rows += dtype_sweep_report()
+
+    # greedy-vs-search tiling + wide-input sweep + BENCH_tiling_search
+    rows += tiling_search_report()
 
     # rwkv6 wkv: 64 tokens x 2 heads
     b, t, h, hd2 = 1, 64, 2, 64

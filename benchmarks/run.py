@@ -49,6 +49,7 @@ def main() -> None:
         pass
 
     emit([], header=True)
+    ran = []
     for name, fn in sections.items():
         if only and name != only:
             continue
@@ -56,8 +57,17 @@ def main() -> None:
         if smoke:
             if has_smoke:
                 emit(fn(smoke=True))
+                ran.append(name)
             continue
         emit(fn())
+        ran.append(name)
+
+    if "kernels" in ran:
+        # headline artifact: aggregate this run's kernel JSONs into the
+        # one canonical series (BENCH_kernel_summary{_smoke}.json) the
+        # perf trajectory tracks across PRs
+        from benchmarks import kernels_bench
+        emit(kernels_bench.kernel_summary_report(smoke=smoke))
 
 
 if __name__ == "__main__":

@@ -5,13 +5,13 @@ TPU-native formulation: a KxK conv is K^2 shifted (Cout x Cin) @ (Cin x HW)
 matmuls -- pure MXU work with the image tile resident in VMEM, instead of a
 GPU-style im2col gather.
 
-Grid: ``(batch, cout_blocks, h_blocks)``.  Each grid step stages
+Grid: ``(batch, cout_blocks, h_blocks, w_blocks)``.  Each grid step stages
 
-  * a *row tile* of the padded input -- ``tile_in_h = (tile_conv_h-1)*stride
-    + K`` rows, i.e. the ``tile_conv_h`` conv rows it produces plus the K-1
-    halo rows shared with the neighbouring tiles (expressed with
+  * a *rectangular tile* of the padded input -- ``tile_in_h x tile_in_w``
+    elements, i.e. the conv rows/cols it produces plus the K-1 halo shared
+    with the neighbouring tiles (expressed with
     ``pl.BlockSpec(..., indexing_mode=pl.unblocked)`` so consecutive input
-    blocks may overlap),
+    blocks may overlap along both spatial axes),
   * one ``block_co``-channel slice of the weights, and
   * the fp32 accumulator / output tile.
 
@@ -19,42 +19,63 @@ VMEM budget model
 -----------------
 Per grid step the kernel holds (``B = dtype bytes``; Pallas double-buffers
 every streamed block for the HBM->VMEM pipeline, hence the factor 2).
-Without a fused pool, ``tile_conv_h == tile_h`` and ``out_w == w_out``;
-with ``maxpool(pool_k, pool_s)`` fused, ``tile_h`` counts *pooled* output
-rows, so the accumulator spans ``tile_conv_h = (tile_h-1)*pool_s + pool_k``
-conv rows while the streamed output block shrinks to the pooled
-``tile_h x pw_out`` footprint (``pw_out = (w_out - pool_k)//pool_s + 1``):
+Without a fused pool, ``tile_conv_h == tile_h`` / ``tile_conv_w == tile_w``;
+with ``maxpool(pool_k, pool_s)`` fused, ``tile_h`` / ``tile_w`` count
+*pooled* output rows/cols, so the accumulator spans
+``tile_conv_h = (tile_h-1)*pool_s + pool_k`` conv rows (same for cols)
+while the streamed output block shrinks to the pooled ``tile_h x tile_w``
+footprint:
 
-    2 * [ cin_block * tile_in_h * W_in * B        (input row tile)
+    2 * [ cin_block * tile_in_h * tile_in_w * B   (input tile)
         + block_co * cin_per_group * K^2 * B      (weight slice)
         + block_co * 4                            (bias column, fp32)
-        + block_co * tile_h * out_w * B ]         (pooled output tile)
-    +   block_co * tile_conv_h * W_out * 4        (fp32 conv accumulator)
+        + block_co * tile_h * tile_w * B ]        (pooled output tile)
+    +   block_co * tile_conv_h * tile_conv_w * 4  (fp32 conv accumulator)
 
 The pooled-epilogue term is why fusion *shrinks* the client-side memory
 footprint the paper optimises: the conv activation lives only as the fp32
 accumulator inside VMEM and is never written to HBM -- the kernel streams
 out the (pool_s^2-times smaller) pooled tile instead.
 
-``choose_tile_h`` picks the largest ``tile_h`` whose estimate fits the
-budget (default 12 MiB, leaving headroom inside a v5e core's ~16 MiB VMEM
-for Mosaic scratch), then shrinks it to ``ceil(h_out / n_blocks)`` so the
-final grid wastes as few padded rows as possible.  ``h_out`` need not be a
-multiple of ``tile_h``: the wrapper zero-pads input rows so the remainder
-tile reads in-bounds and slices the padded output rows away.
+Tiling search
+-------------
+``plan_conv`` picks ``(block_co, tile_h, tile_w)`` *jointly* by minimising
+an explicit per-shape cost model over every channel-block divisor and a
+dedup'd ladder of column splits (``plan_cost``: total HBM traffic the grid
+streams -- input tiles including halo re-reads, the weight slice re-staged
+every grid step, padded output tiles -- plus a fixed per-grid-step overhead
+of ``LAUNCH_COST_BYTES`` bytes-equivalent).  For each candidate the largest
+``tile_h`` whose VMEM estimate fits the budget (default 12 MiB, leaving
+headroom inside a v5e core's ~16 MiB VMEM for Mosaic scratch) is found by
+bisection -- the estimate is monotone in ``tile_h`` -- then shrunk to
+``ceil(p_out / n_blocks)`` so the final grid wastes as few padded rows as
+possible (columns get the same shrink).  The search subsumes the legacy
+greedy choice (largest ``block_co <= 128``, then largest ``tile_h``) as a
+candidate, so it never costs more than greedy; ``REPRO_CONV_SEARCH=0``
+falls back to greedy exactly, and ``REPRO_CONV_TILE_W`` pins the column
+tile (0 = automatic).
+
+Column tiles open the wide-input workloads (1080p camera frames,
+panoramic strips) where a *single output row* overflows VMEM and the
+row-only planner had to give up: the W axis splits with the same
+``pl.unblocked`` halo trick as rows, and with a fused pool the column
+tiles land on pool-window starts exactly as pooled rows do.  ``h_out`` /
+``pw_out`` need not be multiples of the tile: the wrapper zero-pads input
+rows/cols so remainder tiles read in-bounds and slices the padded outputs
+away.
 
 The epilogue (bias add + relu/relu6 + optional maxpool) runs on the fp32
 accumulator before writeback, so a paper-layer conv+relu+maxpool *triple*
 is one kernel launch with no intermediate activation round-tripping HBM.
 
 Storage dtype: the kernel is dtype-polymorphic over the *streamed* blocks.
-Input rows, weights, and the output tile move in ``x.dtype`` (fp32 or
+Input tiles, weights, and the output tile move in ``x.dtype`` (fp32 or
 bf16 under the ``REPRO_CONV_DTYPE`` policy -- see ``kernels.ops.conv2d``)
 and are upcast on load; the accumulator, bias column, and every epilogue
 op are always fp32, and the result is cast back to ``x.dtype`` only at
 writeback.  With 2-byte storage the ``B``-scaled terms of the VMEM model
-halve, so ``choose_tile_h`` (fed ``dtype_bytes = x.dtype.itemsize``)
-roughly doubles the row tile and the grid needs fewer launches.
+halve, so the planner (fed ``dtype_bytes = x.dtype.itemsize``) roughly
+doubles the tile and the grid needs fewer launches.
 Grouped convolution (``feature_group_count``) is supported: pointwise
 (groups=1), group-aligned channel blocks (1 < groups < Cin), and the
 depthwise case (cin_per_group == 1) which runs an elementwise VPU path
@@ -64,6 +85,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +94,52 @@ from jax.experimental.pallas import tpu as pltpu
 
 VMEM_LIMIT_BYTES = 16 * 1024 * 1024     # one v5e core
 DEFAULT_VMEM_BUDGET = 12 * 1024 * 1024  # headroom for Mosaic scratch
+
+# Fixed bytes-equivalent charged per grid step by the tiling-search cost
+# model (DMA descriptor setup + pipeline bubble; ~an HBM microsecond).
+LAUNCH_COST_BYTES = 128 * 1024
+# VMEM lane width: the cost model rounds streamed-block widths up to full
+# lanes so it never prefers a narrow column tile over an equal-byte
+# full-width one (narrow last dims waste lanes on real hardware).
+LANE = 128
+# Channel-block candidates the search may consider (the legacy greedy
+# planner capped block_co at 128; the search goes wider when VMEM allows,
+# trading a bigger weight slice for fewer grid steps).
+MAX_BLOCK_CO = 512
+# Column-split ladder: candidate n_w_blocks in 1..MAX_W_SPLITS (dedup'd by
+# the tile width they imply), enough to shatter an 8K-wide panorama row.
+MAX_W_SPLITS = 128
+
+SEARCH_ENV = "REPRO_CONV_SEARCH"
+TILE_W_ENV = "REPRO_CONV_TILE_W"
+
+
+def search_enabled(search: bool | None = None) -> bool:
+    """Resolve the tiling-search switch *now* (mirrors ``conv_backend``).
+
+    Explicit argument wins, else ``REPRO_CONV_SEARCH`` (default on)."""
+    if search is not None:
+        return search
+    v = os.environ.get(SEARCH_ENV, "1")
+    if v not in ("0", "1"):
+        raise ValueError(f"{SEARCH_ENV} must be '0' or '1', got {v!r}")
+    return v == "1"
+
+
+def tile_w_override(tile_w: int = 0) -> int:
+    """Resolve the column-tile override: explicit argument wins, else
+    ``REPRO_CONV_TILE_W`` (0 = let the planner decide)."""
+    if tile_w:
+        return tile_w
+    v = os.environ.get(TILE_W_ENV, "0")
+    try:
+        n = int(v)
+    except ValueError:
+        raise ValueError(f"{TILE_W_ENV} must be an integer, got {v!r}") \
+            from None
+    if n < 0:
+        raise ValueError(f"{TILE_W_ENV} must be >= 0, got {n}")
+    return n
 
 
 def _pool_out(n: int, pool_k: int, pool_s: int) -> int:
@@ -82,37 +150,66 @@ def _pool_out(n: int, pool_k: int, pool_s: int) -> int:
 def conv_vmem_bytes(*, cin_block: int, block_co: int, tile_h: int,
                     w_in: int, w_out: int, K: int, stride: int,
                     cin_per_group: int, dtype_bytes: int = 4,
-                    pool_k: int = 0, pool_s: int = 1) -> int:
+                    pool_k: int = 0, pool_s: int = 1,
+                    tile_w: int = 0) -> int:
     """Estimated VMEM bytes one grid step of the tiled kernel occupies.
 
-    With ``pool_k > 0`` (fused maxpool epilogue) ``tile_h`` counts pooled
-    output rows; the fp32 accumulator still spans the conv rows feeding
-    those pool windows."""
+    With ``pool_k > 0`` (fused maxpool epilogue) ``tile_h`` / ``tile_w``
+    count pooled output rows/cols; the fp32 accumulator still spans the
+    conv rows/cols feeding those pool windows.  ``tile_w = 0`` means the
+    tile spans the full output width (single column block): the staged
+    input tile is then the full padded width ``w_in``, exactly the legacy
+    row-tiled geometry."""
     if pool_k:
         tile_conv_h = (tile_h - 1) * pool_s + pool_k
-        out_w = _pool_out(w_out, pool_k, pool_s)
+        full_out_w = _pool_out(w_out, pool_k, pool_s)
     else:
-        tile_conv_h, out_w = tile_h, w_out
+        tile_conv_h, full_out_w = tile_h, w_out
     tile_in_h = (tile_conv_h - 1) * stride + K
-    x_b = cin_block * tile_in_h * w_in * dtype_bytes
+    if tile_w and tile_w < full_out_w:
+        out_w = tile_w
+        conv_w = (tile_w - 1) * pool_s + pool_k if pool_k else tile_w
+        in_w = (conv_w - 1) * stride + K
+    else:
+        out_w, conv_w, in_w = full_out_w, w_out, w_in
+    x_b = cin_block * tile_in_h * in_w * dtype_bytes
     w_b = block_co * cin_per_group * K * K * dtype_bytes
     b_b = block_co * 4
     o_b = block_co * tile_h * out_w * dtype_bytes
-    acc = block_co * tile_conv_h * w_out * 4
+    acc = block_co * tile_conv_h * conv_w * 4
     return 2 * (x_b + w_b + b_b + o_b) + acc
+
+
+def _max_fit_tile_h(est, h_cap: int, budget: int) -> int:
+    """Largest ``tile_h in [1, h_cap]`` with ``est(tile_h) <= budget``
+    (0 if even one row overflows).  Bisection is valid because the VMEM
+    estimate is strictly monotone in ``tile_h``."""
+    if est(tile_h=1) > budget:
+        return 0
+    lo, hi = 1, h_cap
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if est(tile_h=mid) <= budget:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
 
 
 def choose_tile_h(h_out: int, *, cin_block: int, block_co: int, w_in: int,
                   w_out: int, K: int, stride: int, cin_per_group: int,
                   dtype_bytes: int = 4, pool_k: int = 0, pool_s: int = 1,
+                  tile_w: int = 0,
                   budget: int = DEFAULT_VMEM_BUDGET) -> int:
-    """Largest output-row tile whose VMEM estimate fits ``budget``, shrunk
-    to the smallest tile with the same block count (minimal padded waste).
+    """Largest output-row tile whose VMEM estimate fits ``budget`` (found
+    by bisection -- the estimate is monotone in ``tile_h``), shrunk to the
+    smallest tile with the same block count (minimal padded waste).
 
     ``h_out`` and the returned tile are in *kernel output rows*: conv rows
     normally, pooled rows when a maxpool epilogue is fused (``pool_k > 0``)
     -- tile boundaries then land on pool-window starts, i.e. ``tile_h`` is
-    aligned to the pool stride by construction."""
+    aligned to the pool stride by construction.  ``tile_w`` narrows the
+    estimate to a column tile (0 = full width)."""
     if h_out < 1:
         raise ValueError(f"invalid conv geometry: h_out={h_out} "
                          f"(kernel/stride larger than padded input)")
@@ -120,15 +217,48 @@ def choose_tile_h(h_out: int, *, cin_block: int, block_co: int, w_in: int,
         conv_vmem_bytes, cin_block=cin_block, block_co=block_co,
         w_in=w_in, w_out=w_out, K=K, stride=stride,
         cin_per_group=cin_per_group, dtype_bytes=dtype_bytes,
-        pool_k=pool_k, pool_s=pool_s)
-    tile_h = next((t for t in range(min(h_out, 512), 0, -1)
-                   if est(tile_h=t) <= budget), 0)
+        pool_k=pool_k, pool_s=pool_s, tile_w=tile_w)
+    tile_h = _max_fit_tile_h(est, min(h_out, 512), budget)
     if tile_h == 0:
         raise ValueError(
             f"conv tile of a single output row exceeds VMEM budget "
-            f"({est(tile_h=1)} > {budget}); W-axis tiling not implemented")
+            f"({est(tile_h=1)} > {budget}); split columns with tile_w "
+            f"(the tiling search, on by default in plan_conv, does this "
+            f"automatically)")
     n_blocks = -(-h_out // tile_h)
     return -(-h_out // n_blocks)
+
+
+def plan_cost(*, n_batch: int, n_c_blocks: int, n_h_blocks: int,
+              n_w_blocks: int, cin_block: int, block_co: int, tile_h: int,
+              tile_w: int, tile_in_h: int, tile_in_w: int, K: int,
+              cin_per_group: int, dtype_bytes: int, p_out: int,
+              pw_out: int) -> dict:
+    """The tiling-search cost model for one candidate grid.
+
+    ``hbm_bytes`` is everything the grid streams between HBM and VMEM:
+    the input tile (halo re-reads appear as overlapping ``tile_in_*``
+    extents, and for groups == 1 every channel block re-reads the same
+    tile), the weight slice re-staged by every grid step, the fp32 bias
+    column, and the (possibly padded) output tile.  ``waste_frac`` is the
+    padded-output overshoot the remainder tiles compute and throw away.
+    ``cost`` adds ``LAUNCH_COST_BYTES`` bytes-equivalent of fixed
+    per-grid-step overhead so ties break toward fewer launches.  Streamed
+    spatial widths are rounded up to full ``LANE`` lanes: a narrow column
+    tile occupies (and moves) whole VMEM lanes on hardware, so the model
+    must not prefer it over an equal-byte full-width tile."""
+    launches = n_batch * n_c_blocks * n_h_blocks * n_w_blocks
+    in_w_eff = -(-tile_in_w // LANE) * LANE
+    out_w_eff = -(-tile_w // LANE) * LANE
+    x_tile = cin_block * tile_in_h * in_w_eff * dtype_bytes
+    w_slice = block_co * cin_per_group * K * K * dtype_bytes
+    b_col = block_co * 4
+    o_tile = block_co * tile_h * out_w_eff * dtype_bytes
+    hbm = launches * (x_tile + w_slice + b_col + o_tile)
+    waste = (n_h_blocks * tile_h * n_w_blocks * tile_w) \
+        / (p_out * pw_out) - 1.0
+    return {"launches": launches, "hbm_bytes": hbm, "waste_frac": waste,
+            "cost": float(hbm + LAUNCH_COST_BYTES * launches)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,9 +267,10 @@ class ConvPlan:
     (exposed for tests; ``conv2d`` consumes it so the BlockSpec geometry
     and the VMEM estimate can never desynchronise).
 
-    With a fused maxpool epilogue (``pool_k > 0``) the kernel's output rows
-    are *pooled* rows: ``tile_h`` / ``n_h_blocks`` tile ``p_out``, and each
-    grid step internally computes ``tile_conv_h`` conv rows."""
+    With a fused maxpool epilogue (``pool_k > 0``) the kernel's output
+    rows/cols are *pooled*: ``tile_h x tile_w`` tiles ``p_out x pw_out``,
+    and each grid step internally computes ``tile_conv_h x tile_conv_w``
+    conv elements."""
     block_co: int
     cin_block: int
     tile_h: int
@@ -155,14 +286,33 @@ class ConvPlan:
     p_out: int = 0      # pooled output rows (== h_out when no pool)
     pw_out: int = 0     # pooled output cols (== w_out when no pool)
     tile_conv_h: int = 0  # conv rows computed per grid step
+    tile_w: int = 0       # output cols per grid step (pooled when fused)
+    tile_in_w: int = 0    # staged input cols per grid step (with halo)
+    n_w_blocks: int = 1   # column tiles (1 = legacy full-width rows)
+    tile_conv_w: int = 0  # conv cols computed per grid step
+    launches: int = 0     # total grid steps (batch x channel x h x w)
+    cost_bytes: float = 0.0   # plan_cost()["cost"] for this geometry
+    searched: bool = False    # True when the joint search picked the plan
 
 
 def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
               pad: int = 0, groups: int = 1, block_co: int = 0,
-              tile_h: int = 0, dtype_bytes: int = 4,
+              tile_h: int = 0, tile_w: int = 0, dtype_bytes: int = 4,
               pool_k: int = 0, pool_s: int = 0,
-              vmem_budget: int = DEFAULT_VMEM_BUDGET) -> ConvPlan:
-    """Pick (block_co, tile_h) for the grid and estimate per-step VMEM."""
+              vmem_budget: int = DEFAULT_VMEM_BUDGET,
+              search: bool | None = None) -> ConvPlan:
+    """Pick ``(block_co, tile_h, tile_w)`` for the grid and estimate
+    per-step VMEM.
+
+    By default the joint cost-model search runs (``plan_cost`` over every
+    channel-block divisor and column-split candidate).  Explicit
+    ``block_co`` / ``tile_h`` arguments pin those dimensions and bypass
+    the search (test/debug overrides keep the legacy greedy semantics);
+    ``tile_w`` (or ``REPRO_CONV_TILE_W``) pins the column tile while the
+    search still picks ``block_co``/``tile_h``.  ``search=False`` (or
+    ``REPRO_CONV_SEARCH=0``) is the legacy greedy planner: largest
+    ``block_co <= 128``, then the largest row tile -- and a ValueError
+    when a single output row overflows the budget."""
     N, Cin, H, W = x_shape
     Cout, cin_pg, K, _ = w_shape
     if Cin != cin_pg * groups or Cout % groups:
@@ -172,18 +322,16 @@ def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
     depthwise = cin_pg == 1 and groups > 1
     if depthwise and g_out != 1:
         raise ValueError("depthwise with channel multiplier > 1 unsupported")
-    if not block_co:
-        # largest channel block <= 128 that divides the group structure
-        limit = Cout if groups == 1 or depthwise else g_out
-        block_co = next(b for b in range(min(limit, 128), 0, -1)
-                        if limit % b == 0)
-    if groups == 1 or depthwise:
-        if Cout % block_co:
-            raise ValueError(f"block_co={block_co} must divide Cout={Cout}")
-    elif g_out % block_co:
-        raise ValueError(f"block_co={block_co} must divide the per-group "
-                         f"output channels ({g_out}) when groups > 1")
-    cin_block = cin_pg * (block_co if depthwise else 1)
+    limit = Cout if groups == 1 or depthwise else g_out
+    if block_co:
+        if groups == 1 or depthwise:
+            if Cout % block_co:
+                raise ValueError(f"block_co={block_co} must divide "
+                                 f"Cout={Cout}")
+        elif g_out % block_co:
+            raise ValueError(f"block_co={block_co} must divide the "
+                             f"per-group output channels ({g_out}) when "
+                             f"groups > 1")
     h_in, w_in = H + 2 * pad, W + 2 * pad
     h_out = (h_in - K) // stride + 1
     w_out = (w_in - K) // stride + 1
@@ -201,54 +349,128 @@ def plan_conv(x_shape: tuple, w_shape: tuple, *, stride: int = 1,
     else:
         pool_s = 1
         p_out, pw_out = h_out, w_out
-    kw = dict(cin_block=cin_block, block_co=block_co, w_in=w_in,
-              w_out=w_out, K=K, stride=stride, cin_per_group=cin_pg,
-              dtype_bytes=dtype_bytes, pool_k=pool_k, pool_s=pool_s)
-    if not tile_h:
-        tile_h = choose_tile_h(p_out, budget=vmem_budget, **kw)
-    tile_h = min(tile_h, p_out)
-    tile_conv_h = (tile_h - 1) * pool_s + pool_k if pool_k else tile_h
-    return ConvPlan(
-        block_co=block_co, cin_block=cin_block, tile_h=tile_h,
-        tile_in_h=(tile_conv_h - 1) * stride + K,
-        n_h_blocks=-(-p_out // tile_h),
-        vmem_bytes=conv_vmem_bytes(tile_h=tile_h, **kw),
-        h_out=h_out, w_out=w_out, g_out=g_out, depthwise=depthwise,
-        pool_k=pool_k, pool_s=pool_s, p_out=p_out, pw_out=pw_out,
-        tile_conv_h=tile_conv_h)
+    if h_out < 1 or w_out < 1:
+        raise ValueError(f"invalid conv geometry: output {h_out}x{w_out} "
+                         f"(kernel/stride larger than padded input)")
+    tile_w = min(tile_w_override(tile_w), pw_out)
+
+    def est_kw(bc):
+        return dict(cin_block=cin_pg * (bc if depthwise else 1),
+                    block_co=bc, w_in=w_in, w_out=w_out, K=K,
+                    stride=stride, cin_per_group=cin_pg,
+                    dtype_bytes=dtype_bytes, pool_k=pool_k, pool_s=pool_s)
+
+    def finalize(bc, th, tw, searched):
+        cin_block = cin_pg * (bc if depthwise else 1)
+        th, tw = min(th, p_out), min(tw, pw_out)
+        n_h, n_w = -(-p_out // th), -(-pw_out // tw)
+        tile_conv_h = (th - 1) * pool_s + pool_k if pool_k else th
+        if n_w == 1:
+            # single column tile: legacy full-width geometry, staged at
+            # the full padded input width
+            tile_conv_w, tile_in_w, tw_est = w_out, w_in, 0
+        else:
+            tile_conv_w = (tw - 1) * pool_s + pool_k if pool_k else tw
+            tile_in_w, tw_est = (tile_conv_w - 1) * stride + K, tw
+        tile_in_h = (tile_conv_h - 1) * stride + K
+        cost = plan_cost(
+            n_batch=N, n_c_blocks=Cout // bc, n_h_blocks=n_h,
+            n_w_blocks=n_w, cin_block=cin_block, block_co=bc, tile_h=th,
+            tile_w=tw, tile_in_h=tile_in_h, tile_in_w=tile_in_w, K=K,
+            cin_per_group=cin_pg, dtype_bytes=dtype_bytes, p_out=p_out,
+            pw_out=pw_out)
+        return ConvPlan(
+            block_co=bc, cin_block=cin_block, tile_h=th,
+            tile_in_h=tile_in_h, n_h_blocks=n_h,
+            vmem_bytes=conv_vmem_bytes(tile_h=th, tile_w=tw_est,
+                                       **est_kw(bc)),
+            h_out=h_out, w_out=w_out, g_out=g_out, depthwise=depthwise,
+            pool_k=pool_k, pool_s=pool_s, p_out=p_out, pw_out=pw_out,
+            tile_conv_h=tile_conv_h, tile_w=tw, tile_in_w=tile_in_w,
+            n_w_blocks=n_w, tile_conv_w=tile_conv_w,
+            launches=cost["launches"], cost_bytes=cost["cost"],
+            searched=searched)
+
+    do_search = search_enabled(search) and not block_co and not tile_h
+    if not do_search:
+        # legacy greedy: largest channel block <= 128 dividing the group
+        # structure, then the largest row tile that fits the budget
+        if not block_co:
+            block_co = next(b for b in range(min(limit, 128), 0, -1)
+                            if limit % b == 0)
+        if not tile_h:
+            tile_h = choose_tile_h(p_out, budget=vmem_budget,
+                                   tile_w=tile_w, **est_kw(block_co))
+        return finalize(block_co, tile_h, tile_w or pw_out, False)
+
+    # joint search: every channel-block divisor x column-split candidate,
+    # row tile maximised by bisection, scored by plan_cost
+    bcs = [d for d in range(1, min(limit, MAX_BLOCK_CO) + 1)
+           if limit % d == 0]
+    if tile_w:
+        tws = [tile_w]
+    else:
+        tws = sorted({-(-pw_out // n)
+                      for n in range(1, min(pw_out, MAX_W_SPLITS) + 1)},
+                     reverse=True)
+    best, best_key = None, None
+    for bc in bcs:
+        kw = est_kw(bc)
+        for tw in tws:
+            tw_est = 0 if tw >= pw_out else tw
+            th = _max_fit_tile_h(
+                functools.partial(conv_vmem_bytes, tile_w=tw_est, **kw),
+                min(p_out, 512), vmem_budget)
+            if th == 0:
+                continue
+            # shrink both tiles to the smallest with the same block count
+            th = -(-p_out // -(-p_out // th))
+            tw_s = -(-pw_out // -(-pw_out // tw))
+            cand = finalize(bc, th, tw_s, True)
+            key = (cand.cost_bytes, cand.launches, cand.n_w_blocks,
+                   cand.n_h_blocks, -cand.block_co)
+            if best is None or key < best_key:
+                best, best_key = cand, key
+    if best is None:
+        one = conv_vmem_bytes(tile_h=1, tile_w=1, **est_kw(bcs[0]))
+        raise ValueError(
+            f"no feasible conv tiling: even a single-element output tile "
+            f"at block_co={bcs[0]} needs {one} bytes > budget "
+            f"{vmem_budget}")
+    return best
 
 
 def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
-                 tile_h: int, tile_conv_h: int, w_out: int, pw_out: int,
+                 tile_h: int, tile_conv_h: int, conv_w: int, out_w: int,
                  depthwise: bool, activation: str | None,
                  pool_k: int, pool_s: int):
-    x = x_ref[0].astype(jnp.float32)           # (cin_block, tile_in_h, w_in)
-    wts = w_ref[...].astype(jnp.float32)       # (block_co, cin_pg, K, K)
+    x = x_ref[0].astype(jnp.float32)       # (cin_block, tile_in_h, tile_in_w)
+    wts = w_ref[...].astype(jnp.float32)   # (block_co, cin_pg, K, K)
     block_co = wts.shape[0]
     cin = x.shape[0]
     if depthwise:
         # channel-aligned elementwise path: output channel c reads input
         # channel c of the staged block -- no MXU, pure VPU multiplies
-        acc = jnp.zeros((block_co, tile_conv_h, w_out), jnp.float32)
+        acc = jnp.zeros((block_co, tile_conv_h, conv_w), jnp.float32)
         for kh in range(K):
             for kw in range(K):
                 xs = jax.lax.slice(
                     x, (0, kh, kw),
                     (cin, kh + (tile_conv_h - 1) * stride + 1,
-                     kw + (w_out - 1) * stride + 1),
-                    (1, stride, stride))    # (block_co, tile_conv_h, w_out)
+                     kw + (conv_w - 1) * stride + 1),
+                    (1, stride, stride))    # (block_co, tile_conv_h, conv_w)
                 acc += xs * wts[:, 0, kh, kw][:, None, None]
-        acc = acc.reshape(block_co, tile_conv_h * w_out)
+        acc = acc.reshape(block_co, tile_conv_h * conv_w)
     else:
-        acc = jnp.zeros((block_co, tile_conv_h * w_out), jnp.float32)
+        acc = jnp.zeros((block_co, tile_conv_h * conv_w), jnp.float32)
         for kh in range(K):
             for kw in range(K):
                 xs = jax.lax.slice(
                     x, (0, kh, kw),
                     (cin, kh + (tile_conv_h - 1) * stride + 1,
-                     kw + (w_out - 1) * stride + 1),
-                    (1, stride, stride))       # (cin, tile_conv_h, w_out)
-                xs = xs.reshape(cin, tile_conv_h * w_out)
+                     kw + (conv_w - 1) * stride + 1),
+                    (1, stride, stride))       # (cin, tile_conv_h, conv_w)
+                xs = xs.reshape(cin, tile_conv_h * conv_w)
                 wk = wts[:, :, kh, kw]         # (block_co, cin)
                 acc += jax.lax.dot_general(
                     wk, xs, (((1,), (0,)), ((), ())),
@@ -258,7 +480,7 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
         acc = jnp.maximum(acc, 0.0)
     elif activation == "relu6":
         acc = jnp.clip(acc, 0.0, 6.0)
-    acc = acc.reshape(block_co, tile_conv_h, w_out)
+    acc = acc.reshape(block_co, tile_conv_h, conv_w)
     if pool_k:
         # pooled epilogue: max over the pool_k x pool_k window, straight
         # from the fp32 accumulator -- the conv rows never leave VMEM
@@ -268,8 +490,8 @@ def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int, stride: int,
                 s = jax.lax.slice(
                     acc, (0, ph, pw),
                     (block_co, ph + (tile_h - 1) * pool_s + 1,
-                     pw + (pw_out - 1) * pool_s + 1),
-                    (1, pool_s, pool_s))       # (block_co, tile_h, pw_out)
+                     pw + (out_w - 1) * pool_s + 1),
+                    (1, pool_s, pool_s))       # (block_co, tile_h, out_w)
                 pooled = s if pooled is None else jnp.maximum(pooled, s)
         acc = pooled
     o_ref[0] = acc.astype(o_ref.dtype)
@@ -279,8 +501,9 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
            pad: int = 0, bias: jnp.ndarray | None = None,
            activation: str | None = None, groups: int = 1,
            pool_k: int = 0, pool_s: int = 0,
-           block_co: int = 0, tile_h: int = 0,
+           block_co: int = 0, tile_h: int = 0, tile_w: int = 0,
            vmem_budget: int = DEFAULT_VMEM_BUDGET,
+           search: bool | None = None,
            interpret: bool = True) -> jnp.ndarray:
     """x: (N, Cin, H, W); w: (Cout, Cin/groups, K, K) -> (N, Cout, Ho, Wo).
 
@@ -288,60 +511,76 @@ def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
     the kernel epilogue; ``groups`` follows lax ``feature_group_count``.
     ``pool_k > 0`` additionally fuses a VALID ``maxpool(pool_k, pool_s)``
     (``pool_s`` defaults to ``pool_k``) after the activation, returning the
-    pooled (N, Cout, Po, Pw) tensor from the same launch."""
+    pooled (N, Cout, Po, Pw) tensor from the same launch.  Tiling comes
+    from ``plan_conv`` (joint cost-model search by default; ``block_co`` /
+    ``tile_h`` / ``tile_w`` / ``search`` are overrides)."""
     if activation not in (None, "relu", "relu6"):
         raise ValueError(f"unknown activation {activation!r}")
     N, Cin, H, W = x.shape
     Cout, cin_pg, K, _ = w.shape
     plan = plan_conv(x.shape, w.shape, stride=stride, pad=pad, groups=groups,
-                     block_co=block_co, tile_h=tile_h,
+                     block_co=block_co, tile_h=tile_h, tile_w=tile_w,
                      pool_k=pool_k, pool_s=pool_s,
-                     dtype_bytes=x.dtype.itemsize, vmem_budget=vmem_budget)
-    block_co, tile_h = plan.block_co, plan.tile_h
+                     dtype_bytes=x.dtype.itemsize, vmem_budget=vmem_budget,
+                     search=search)
+    block_co, tile_h, tile_w = plan.block_co, plan.tile_h, plan.tile_w
     pool_k, pool_s = plan.pool_k, plan.pool_s
     p_out, pw_out = plan.p_out, plan.pw_out
     h_in, w_in = H + 2 * pad, W + 2 * pad
-    # pad rows so the remainder tile's halo read stays in-bounds (the padded
-    # pooled rows, and the conv rows feeding only them, are sliced away)
+    # pad rows/cols so every remainder tile's halo read stays in-bounds
+    # (the padded pooled rows/cols, and the conv elements feeding only
+    # them, are sliced away)
     p_out_pad = plan.n_h_blocks * tile_h
+    pw_out_pad = plan.n_w_blocks * tile_w
     conv_rows = ((p_out_pad - 1) * pool_s + pool_k) if pool_k \
         else p_out_pad
     rows_needed = (conv_rows - 1) * stride + K
+    if plan.n_w_blocks == 1:
+        cols_extra = 0
+    else:
+        conv_cols = ((pw_out_pad - 1) * pool_s + pool_k) if pool_k \
+            else pw_out_pad
+        cols_extra = max(0, (conv_cols - 1) * stride + K - w_in)
     x = jnp.pad(x, ((0, 0), (0, 0),
-                    (pad, pad + max(0, rows_needed - h_in)), (pad, pad)))
+                    (pad, pad + max(0, rows_needed - h_in)),
+                    (pad, pad + cols_extra)))
     if bias is None:
         bias = jnp.zeros((Cout,), jnp.float32)
     bias2d = bias.reshape(Cout, 1).astype(jnp.float32)
 
     g_out = plan.g_out
-    # consecutive tiles advance by tile_h kernel-output rows, i.e.
-    # tile_h * pool_s conv rows, i.e. tile_h * pool_s * stride input rows
+    # consecutive tiles advance by tile_h/tile_w kernel-output elements,
+    # i.e. tile * pool_s conv elements, i.e. tile * pool_s * stride input
+    # elements -- so pooled tiles land on pool-window starts on both axes
     row_step = tile_h * pool_s * stride
+    col_step = tile_w * pool_s * stride
     kernel = functools.partial(
         _conv_kernel, K=K, stride=stride, tile_h=tile_h,
-        tile_conv_h=plan.tile_conv_h, w_out=plan.w_out, pw_out=pw_out,
-        depthwise=plan.depthwise, activation=activation,
+        tile_conv_h=plan.tile_conv_h, conv_w=plan.tile_conv_w,
+        out_w=tile_w, depthwise=plan.depthwise, activation=activation,
         pool_k=pool_k, pool_s=pool_s)
     out = pl.pallas_call(
         kernel,
-        grid=(N, Cout // block_co, plan.n_h_blocks),
+        grid=(N, Cout // block_co, plan.n_h_blocks, plan.n_w_blocks),
         in_specs=[
-            # overlapping (haloed) row tiles: element offsets, not block ids
+            # overlapping (haloed) tiles: element offsets, not block ids
             pl.BlockSpec(
-                (1, plan.cin_block, plan.tile_in_h, w_in),
-                lambda n, c, h: (n, c * block_co // g_out * cin_pg,
-                                 h * row_step, 0),
+                (1, plan.cin_block, plan.tile_in_h, plan.tile_in_w),
+                lambda n, c, h, w: (n, c * block_co // g_out * cin_pg,
+                                    h * row_step, w * col_step),
                 indexing_mode=pl.unblocked),
             pl.BlockSpec((block_co, cin_pg, K, K),
-                         lambda n, c, h: (c, 0, 0, 0)),
-            pl.BlockSpec((block_co, 1), lambda n, c, h: (c, 0)),
+                         lambda n, c, h, w: (c, 0, 0, 0)),
+            pl.BlockSpec((block_co, 1), lambda n, c, h, w: (c, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_co, tile_h, pw_out),
-                               lambda n, c, h: (n, c, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, Cout, p_out_pad, pw_out),
+        out_specs=pl.BlockSpec((1, block_co, tile_h, tile_w),
+                               lambda n, c, h, w: (n, c, h, w)),
+        out_shape=jax.ShapeDtypeStruct((N, Cout, p_out_pad, pw_out_pad),
                                        x.dtype),
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel")),
+            dimension_semantics=("parallel",) * 4),
         interpret=interpret,
     )(x, w, bias2d)
-    return out[:, :, :p_out, :] if p_out_pad != p_out else out
+    if p_out_pad != p_out or pw_out_pad != pw_out:
+        out = out[:, :, :p_out, :pw_out]
+    return out

@@ -70,17 +70,20 @@ def flash_attention_gqa(q, k, v, *, causal: bool = True,
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "pad", "activation", "groups",
-                                    "pool_k", "pool_s", "interpret"))
+                                    "pool_k", "pool_s", "tile_w", "search",
+                                    "interpret"))
 def _conv2d(x, w, *, stride, pad, bias, activation, groups, pool_k, pool_s,
-            interpret):
+            tile_w, search, interpret):
     return _conv.conv2d(x, w, stride=stride, pad=pad, bias=bias,
                         activation=activation, groups=groups,
-                        pool_k=pool_k, pool_s=pool_s, interpret=interpret)
+                        pool_k=pool_k, pool_s=pool_s, tile_w=tile_w,
+                        search=search, interpret=interpret)
 
 
 def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
            activation: str | None = None, groups: int = 1,
-           pool_k: int = 0, pool_s: int = 0, dtype: str | None = None):
+           pool_k: int = 0, pool_s: int = 0, dtype: str | None = None,
+           tile_w: int = 0, search: bool | None = None):
     """Fused conv(+bias)(+relu/relu6)(+maxpool): one tiled kernel launch.
 
     ``bias`` (Cout,) and ``activation`` run in the kernel epilogue on the
@@ -96,14 +99,25 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
     elements and doubles ``tile_h`` for the same VMEM budget -- while the
     accumulator, bias add, activation, and pool epilogue all stay fp32;
     the output tensor is returned in the storage dtype.  ``fp32`` is the
-    no-downcast default: tensors keep whatever dtype they already have."""
+    no-downcast default: tensors keep whatever dtype they already have.
+
+    Tiling comes from the joint ``plan_conv`` cost-model search by
+    default; ``tile_w`` pins the column tile and ``search=False`` falls
+    back to the legacy greedy planner.  Both resolve their env knobs
+    (``REPRO_CONV_TILE_W`` / ``REPRO_CONV_SEARCH``) at *call* time and are
+    threaded into the jit as static arguments, so flipping an env var
+    between calls retraces with the new plan instead of silently reusing
+    the old grid."""
     if conv_dtype(dtype) == "bf16":
         jdt = policy_jnp_dtype("bf16")
         x = x if x.dtype == jdt else x.astype(jdt)
         w = w if w.dtype == jdt else w.astype(jdt)
     return _conv2d(x, w, stride=stride, pad=pad, bias=bias,
                    activation=activation, groups=groups,
-                   pool_k=pool_k, pool_s=pool_s, interpret=interpret_mode())
+                   pool_k=pool_k, pool_s=pool_s,
+                   tile_w=_conv.tile_w_override(tile_w),
+                   search=_conv.search_enabled(search),
+                   interpret=interpret_mode())
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))

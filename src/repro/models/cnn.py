@@ -250,7 +250,13 @@ def _conv2d(x, w, b, stride, pad, groups=1, activation=None,
     any) runs as a separate reduce_window so both backends share the same
     call signature and semantics.  ``dtype`` is the storage policy
     (``conv_dtype``): under bf16 both backends store inputs/weights and
-    the returned activation in bfloat16 while accumulating in fp32."""
+    the returned activation in bfloat16 while accumulating in fp32.
+
+    Tiling on the pallas path comes from the ``plan_conv`` joint search
+    (``REPRO_CONV_SEARCH`` / ``REPRO_CONV_TILE_W`` knobs): with column
+    tiles the kernel also handles high-resolution client inputs (1080p
+    frames, panoramic strips) whose single output row overflows VMEM --
+    ``INPUT_SHAPE`` is just the paper default, not a limit."""
     policy = conv_dtype(dtype)
     if conv_backend(backend) == "pallas":
         from repro.kernels import ops
@@ -439,6 +445,35 @@ def conv_pool_triples(layers: list[Layer],
             mp = layers[i + 2]
             out.append((i, shape[0], shape[1], l.cout, l.ksize, l.stride,
                         l.pad, layers[i + 1].kind, mp.ksize, mp.stride))
+        shape = layer_out_shape(l, shape)
+    return out
+
+
+def conv_plans(layers: list[Layer], in_shape: tuple = INPUT_SHAPE, *,
+               batch: int = 1, dtype: str | None = None,
+               search: bool | None = None) -> list[tuple]:
+    """``(layer_index, ConvPlan)`` for every conv paper-layer, planned
+    exactly as the pallas fusion walk will launch it: a conv heading a
+    conv->relu->maxpool triple is planned *with* its fused pool geometry
+    (``conv_pool_triples`` supplies the window -- the same source
+    ``apply_cnn`` mirrors), and the planner sees the storage policy's
+    element size, so the plan/BlockSpec geometry the runtime executes and
+    the launch/VMEM numbers benches and tests reason about can never
+    desynchronise.  ``search`` forwards to ``plan_conv`` (None = resolve
+    ``REPRO_CONV_SEARCH``)."""
+    from repro.kernels.conv2d import plan_conv
+    nbytes = dtype_bytes(conv_dtype(dtype))
+    triples = {t[0]: t for t in conv_pool_triples(layers, in_shape)}
+    shape = in_shape
+    out = []
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            pk, ps = (triples[i][-2], triples[i][-1]) if i in triples \
+                else (0, 0)
+            out.append((i, plan_conv(
+                (batch,) + shape, (l.cout, shape[0], l.ksize, l.ksize),
+                stride=l.stride, pad=l.pad, pool_k=pk, pool_s=ps,
+                dtype_bytes=nbytes, search=search)))
         shape = layer_out_shape(l, shape)
     return out
 

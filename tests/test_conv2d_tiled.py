@@ -15,7 +15,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.conv2d import (DEFAULT_VMEM_BUDGET, VMEM_LIMIT_BYTES,
                                   choose_tile_h, conv2d, conv_vmem_bytes,
-                                  plan_conv)
+                                  plan_conv, search_enabled, tile_w_override)
 from repro.models import cnn
 
 KEY = jax.random.PRNGKey(0)
@@ -296,6 +296,224 @@ def test_env_var_routes_apply_cnn(monkeypatch):
     want = cnn.apply_cnn(_TINY, params, x)
     monkeypatch.setenv("REPRO_CONV_BACKEND", "pallas")
     got = cnn.apply_cnn(_TINY, params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Column (W-axis) tiling + the joint (block_co, tile_h, tile_w) search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tile_w", [1, 3, 5, 8, 14])
+def test_conv2d_column_remainder_tiles(tile_w):
+    """w_out = 14 is not a multiple of most tile widths: the padded
+    remainder column tile must not leak into the sliced output."""
+    x, w, b = _inputs(2, 6, 14, 12, 3)
+    got = conv2d(x, w, stride=1, pad=1, bias=b, tile_h=5, tile_w=tile_w)
+    want = ref.conv2d_ref(x, w, stride=1, pad=1, bias=b)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pk,ps", [(2, 2), (3, 2)])
+@pytest.mark.parametrize("tile_w", [1, 2, 3])
+def test_pooled_column_tiles_land_on_window_starts(pk, ps, tile_w):
+    """With a fused maxpool, tile_w counts *pooled* columns: consecutive
+    column tiles must advance by whole pool windows (including the
+    overlapping pk > ps case), matching the XLA reference exactly."""
+    x, w, b = _inputs(2, 6, 17, 12, 3)
+    got = conv2d(x, w, stride=1, pad=1, bias=b, activation="relu",
+                 pool_k=pk, pool_s=ps, tile_h=2, tile_w=tile_w)
+    y = ref.conv2d_ref(x, w, stride=1, pad=1, bias=b, activation="relu")
+    want = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                 (1, 1, pk, pk), (1, 1, ps, ps), "VALID")
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wide_row_greedy_raises_search_runs():
+    """A row too wide for the budget: the legacy greedy planner must
+    raise (the old 'W-axis tiling not implemented' wall) while the search
+    splits columns, executes, and matches the reference.  A tiny budget
+    stands in for the 12 MiB wall so the test stays fast -- the real
+    full-budget strip shapes run in benchmarks/kernels_bench.py."""
+    x, w, b = _inputs(1, 8, 12, 16, 3)
+    x = jnp.concatenate([x] * 8, axis=3)            # 12 x 96 strip
+    budget = 40 * 1024
+    with pytest.raises(ValueError, match="single output row"):
+        plan_conv(x.shape, w.shape, stride=1, pad=1, vmem_budget=budget,
+                  search=False)
+    plan = plan_conv(x.shape, w.shape, stride=1, pad=1, vmem_budget=budget)
+    assert plan.searched and plan.n_w_blocks > 1
+    assert plan.vmem_bytes <= budget
+    got = conv2d(x, w, stride=1, pad=1, bias=b, activation="relu",
+                 vmem_budget=budget)
+    want = ref.conv2d_ref(x, w, stride=1, pad=1, bias=b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_search_launches_never_exceed_greedy_on_paper_shapes():
+    """Acceptance: on every AlexNet/VGG16 conv shape (fp32 and bf16) the
+    joint search needs <= the greedy planner's launches, with a strict
+    reduction on at least two VGG16 layers (planning only, so the full
+    sweep stays in tier-1)."""
+    from benchmarks.kernels_bench import model_conv_specs
+    strict_vgg16 = 0
+    for model in ("alexnet", "vgg16"):
+        for name, cin, hw, cout, k, s, p, act, pk, ps in \
+                model_conv_specs(model):
+            for nbytes in (4, 2):
+                args = dict(stride=s, pad=p, pool_k=pk, pool_s=ps,
+                            dtype_bytes=nbytes)
+                greedy = plan_conv((1, cin, hw, hw), (cout, cin, k, k),
+                                   search=False, **args)
+                searched = plan_conv((1, cin, hw, hw), (cout, cin, k, k),
+                                     search=True, **args)
+                assert searched.launches <= greedy.launches, (name, nbytes)
+                assert searched.vmem_bytes <= DEFAULT_VMEM_BUDGET
+                if model == "vgg16" and nbytes == 4 \
+                        and searched.launches < greedy.launches:
+                    strict_vgg16 += 1
+    assert strict_vgg16 >= 2
+
+
+def test_search_cost_at_most_greedy_cost():
+    """The greedy point is in the search space, so the searched plan's
+    cost-model bytes can never exceed greedy's."""
+    for shape, wshape, kw in [
+            ((1, 64, 224, 224), (64, 64, 3, 3), dict(stride=1, pad=1)),
+            ((1, 64, 27, 27), (192, 64, 5, 5),
+             dict(stride=1, pad=2, pool_k=3, pool_s=2)),
+            ((2, 16, 33, 65), (48, 16, 3, 3), dict(stride=2, pad=1))]:
+        g = plan_conv(shape, wshape, search=False, **kw)
+        s = plan_conv(shape, wshape, search=True, **kw)
+        assert s.cost_bytes <= g.cost_bytes
+
+
+def test_choose_tile_h_bisection_matches_linear_scan():
+    """The bisected max-fit tile must equal the legacy O(512) downward
+    scan's result (the estimate is monotone, so both find the largest
+    fitting tile, then apply the same waste-minimising shrink)."""
+    for budget in (DEFAULT_VMEM_BUDGET, 4 * 1024 * 1024, 2 * 1024 * 1024):
+        for pool in ((0, 1), (2, 2), (3, 2)):
+            kw = dict(cin_block=64, block_co=64, w_in=226, w_out=224, K=3,
+                      stride=1, cin_per_group=64, pool_k=pool[0],
+                      pool_s=pool[1])
+            h_out = 224 if not pool[0] else (224 - pool[0]) // pool[1] + 1
+            got = choose_tile_h(h_out, budget=budget, **kw)
+            scan = next((t for t in range(min(h_out, 512), 0, -1)
+                         if conv_vmem_bytes(tile_h=t, **kw) <= budget), 0)
+            assert scan, "budget too small for the linear-scan oracle"
+            n_blocks = -(-h_out // scan)
+            assert got == -(-h_out // n_blocks)
+
+
+def test_plan_env_knobs(monkeypatch):
+    """REPRO_CONV_SEARCH=0 reproduces the greedy plan; REPRO_CONV_TILE_W
+    pins the column tile; malformed values raise with the var named."""
+    shape, wshape = (1, 64, 56, 56), (256, 64, 3, 3)
+    monkeypatch.delenv("REPRO_CONV_SEARCH", raising=False)
+    monkeypatch.delenv("REPRO_CONV_TILE_W", raising=False)
+    assert search_enabled() and tile_w_override() == 0
+    default = plan_conv(shape, wshape, stride=1, pad=1)
+    assert default.searched
+    monkeypatch.setenv("REPRO_CONV_SEARCH", "0")
+    greedy_env = plan_conv(shape, wshape, stride=1, pad=1)
+    assert greedy_env == plan_conv(shape, wshape, stride=1, pad=1,
+                                   search=False)
+    assert not greedy_env.searched
+    assert plan_conv(shape, wshape, stride=1, pad=1,
+                     search=True).searched    # explicit arg beats env
+    monkeypatch.delenv("REPRO_CONV_SEARCH", raising=False)
+    monkeypatch.setenv("REPRO_CONV_TILE_W", "14")
+    pinned = plan_conv(shape, wshape, stride=1, pad=1)
+    assert pinned.tile_w == 14 and pinned.n_w_blocks == 4
+    assert plan_conv(shape, wshape, stride=1, pad=1,
+                     tile_w=28).tile_w == 28  # explicit arg beats env
+    monkeypatch.setenv("REPRO_CONV_SEARCH", "maybe")
+    with pytest.raises(ValueError, match="REPRO_CONV_SEARCH"):
+        plan_conv(shape, wshape, stride=1, pad=1)
+    monkeypatch.delenv("REPRO_CONV_SEARCH", raising=False)
+    monkeypatch.setenv("REPRO_CONV_TILE_W", "wide")
+    with pytest.raises(ValueError, match="REPRO_CONV_TILE_W"):
+        plan_conv(shape, wshape, stride=1, pad=1)
+
+
+def test_env_tile_w_routes_through_ops(monkeypatch):
+    """The ops-layer jit must not serve a stale grid when the env knobs
+    flip between calls: pin a column tile via REPRO_CONV_TILE_W and check
+    the executed kernel still matches the reference."""
+    x, w, b = _inputs(1, 6, 20, 8, 3)
+    from repro.kernels import ops
+    want = ref.conv2d_ref(x, w, stride=1, pad=1, bias=b, activation="relu")
+    monkeypatch.setenv("REPRO_CONV_TILE_W", "7")
+    got = ops.conv2d(x, w, stride=1, pad=1, bias=b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    monkeypatch.setenv("REPRO_CONV_SEARCH", "0")
+    monkeypatch.delenv("REPRO_CONV_TILE_W", raising=False)
+    got = ops.conv2d(x, w, stride=1, pad=1, bias=b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_plans_matches_fusion_walk_geometry():
+    """cnn.conv_plans plans each conv exactly as the pallas walk launches
+    it: triple-heading convs carry their fused pool window, and the plan
+    matches a direct plan_conv call with the same geometry."""
+    layers = cnn.CNN_MODELS["alexnet"]
+    plans = dict(cnn.conv_plans(layers))
+    triples = {t[0]: t for t in cnn.conv_pool_triples(layers)}
+    shape = cnn.INPUT_SHAPE
+    n_convs = 0
+    for i, l in enumerate(layers):
+        if l.kind == "conv":
+            n_convs += 1
+            plan = plans[i]
+            pk = triples[i][-2] if i in triples else 0
+            assert plan.pool_k == pk
+            want = plan_conv((1,) + shape,
+                             (l.cout, shape[0], l.ksize, l.ksize),
+                             stride=l.stride, pad=l.pad, pool_k=pk,
+                             pool_s=triples[i][-1] if i in triples else 0)
+            assert plan == want
+        shape = cnn.layer_out_shape(l, shape)
+    assert len(plans) == n_convs
+    # dtype plumbing: bf16 plans never need more launches
+    plans16 = dict(cnn.conv_plans(layers, dtype="bf16"))
+    assert all(plans16[i].launches <= plans[i].launches for i in plans)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,cin,H,W,cout,k,s,p,pk,ps", [
+    ("strip7680", 64, 16, 7680, 64, 3, 1, 1, 0, 0),
+    ("strip6144_pool", 64, 17, 6144, 64, 3, 1, 1, 2, 2),
+])
+def test_wide_strip_full_budget_parity(name, cin, H, W, cout, k, s, p,
+                                       pk, ps):
+    """Acceptance: panoramic strips whose single output row overflows the
+    default 12 MiB budget (ValueError on main) run on the pallas backend
+    and match ref.conv2d_ref at the established tolerances."""
+    x = jax.random.normal(KEY, (1, cin, H, W)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(KEY, 1),
+                          (cout, cin, k, k)) * 0.2
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (cout,)) * 0.1
+    with pytest.raises(ValueError, match="single output row"):
+        plan_conv(x.shape, w.shape, stride=s, pad=p, pool_k=pk, pool_s=ps,
+                  search=False)
+    plan = plan_conv(x.shape, w.shape, stride=s, pad=p, pool_k=pk,
+                     pool_s=ps)
+    assert plan.n_w_blocks > 1
+    assert plan.vmem_bytes <= DEFAULT_VMEM_BUDGET
+    got = conv2d(x, w, stride=s, pad=p, bias=b, activation="relu",
+                 pool_k=pk, pool_s=ps)
+    want = ref.conv2d_ref(x, w, stride=s, pad=p, bias=b, activation="relu")
+    if pk:
+        want = jax.lax.reduce_window(want, -jnp.inf, jax.lax.max,
+                                     (1, 1, pk, pk), (1, 1, ps, ps),
+                                     "VALID")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
