@@ -1,0 +1,197 @@
+"""Chaos harness: fault-rate x model x dtype robustness sweep.
+
+Runs the fault-tolerant split runtime (``repro.runtime``) against seeded
+flaky-link profiles and measures what the recovery machinery costs and
+whether it ever loses a request: per cell we record success rate, added
+link latency (p50/p99 of virtual link time beyond the ideal fault-free
+transfer), wire amplification (retransmitted bytes), recovery counts
+(retries, device fallbacks, Pareto-front re-picks), and -- for the clean
+profile -- bit-identity of the full runtime path against ``apply_split``.
+
+Headline artifact: ``benchmarks/out/BENCH_robustness{_smoke}.json``.
+
+CLI: ``python -m benchmarks.robustness_bench [--smoke] [--seeds 0,1,2]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, time_us
+from repro.core import PAPER_ENV_J6, smartsplit_exhaustive
+from repro.models import cnn as cnn_lib
+from repro.models.profiles import cnn_profile
+from repro.runtime import FaultSpec, FaultyLink, RetryPolicy, SplitRuntime
+
+MODELS = ("alexnet", "vgg16", "mobilenetv2")
+SMOKE_MODELS = ("alexnet", "mobilenetv2")
+DTYPES = ("fp32", "bf16")
+
+# Acceptance profile: 30% drops plus one outage window opening at t=0 so
+# every run's first transfer provably collides with it (a transfer whose
+# wire time overlaps a window dies -- see FaultyLink.outage_overlaps).
+FAULT_PROFILES: dict[str, FaultSpec] = {
+    "clean": FaultSpec(),
+    "drop10": FaultSpec(drop_rate=0.10),
+    "drop30_outage": FaultSpec(drop_rate=0.30, outages=((0.0, 1.0),)),
+}
+
+# The paper link moves ~1.25 MB/s, so boundary payloads of a few MB need
+# seconds on the virtual clock -- 16s covers the largest VGG16 fp32
+# boundary (12.8 MB ~ 10.2s) with slack; smoke payloads are KBs, so a 2s
+# timeout keeps its retry ladders (and reported added latency) small.
+POLICY = RetryPolicy(max_attempts=5, timeout_s=16.0, backoff_base_s=0.05)
+POLICY_SMOKE = RetryPolicy(max_attempts=5, timeout_s=2.0,
+                           backoff_base_s=0.05)
+
+
+def _ideal_transfer_s(link: FaultyLink, nbytes: int) -> float:
+    return link.latency_s + nbytes / link.bandwidth
+
+
+def run_cell(model: str, dtype: str, profile_name: str, spec: FaultSpec,
+             seeds: tuple[int, ...], in_shape: tuple, requests: int,
+             params, x, policy: RetryPolicy = POLICY) -> dict:
+    """One (model, dtype, fault-profile) cell across link seeds."""
+    hw = PAPER_ENV_J6
+    prof = cnn_profile(model, in_shape=in_shape, dtype=dtype)
+    plan = smartsplit_exhaustive(prof, hw)
+    layers = cnn_lib.CNN_MODELS[model]
+    ref_logits, ref_boundary = cnn_lib.apply_split(
+        layers, params, x, plan.split_index, dtype=dtype)
+    ref_np = np.asarray(ref_logits)
+
+    added_s: list[float] = []
+    completed = 0
+    total = 0
+    bit_identical = True
+    agg = {"recovered": 0, "fallback_device": 0, "repicks": 0,
+           "proactive_resplits": 0, "attempts": 0,
+           "retransmitted_bytes": 0, "wire_bytes": 0}
+    for seed in seeds:
+        link = FaultyLink(hw.link.bandwidth, faults=spec, seed=seed)
+        rt = SplitRuntime(model, params, plan, prof, hw, link=link,
+                          dtype=dtype, policy=policy, jitter_seed=seed)
+        for _ in range(requests):
+            total += 1
+            r = rt.infer(x)
+            jax.block_until_ready(r.logits)
+            completed += 1
+            ideal = _ideal_transfer_s(link, r.goodput_bytes) \
+                if not r.on_device else 0.0
+            added_s.append(max(r.link_elapsed_s - ideal, 0.0))
+            agg["attempts"] += r.attempts
+            agg["retransmitted_bytes"] += r.retransmitted_bytes
+            agg["wire_bytes"] += r.wire_bytes
+            if not r.degraded:
+                bit_identical &= bool(
+                    np.array_equal(np.asarray(r.logits), ref_np))
+        s = rt.stats()
+        for k in ("recovered", "fallback_device", "repicks",
+                  "proactive_resplits"):
+            agg[k] += s[k]
+    return {
+        "model": model, "dtype": dtype, "profile": profile_name,
+        "split_index": plan.split_index,
+        "boundary_bytes": int(np.asarray(ref_boundary).nbytes),
+        "requests": total,
+        "completed": completed,
+        "success_rate": completed / total,
+        "added_latency_p50_s": float(np.percentile(added_s, 50)),
+        "added_latency_p99_s": float(np.percentile(added_s, 99)),
+        "bit_identical_when_clean": bit_identical,
+        **agg,
+        "faults": {"drop_rate": spec.drop_rate,
+                   "corrupt_rate": spec.corrupt_rate,
+                   "delay_rate": spec.delay_rate,
+                   "outages": list(spec.outages)},
+        "seeds": list(seeds),
+    }
+
+
+def chaos_sweep(*, models=MODELS, dtypes=DTYPES, profiles=None,
+                seeds=(0,), in_shape=cnn_lib.INPUT_SHAPE,
+                requests: int = 6,
+                policy: RetryPolicy = POLICY) -> dict:
+    profiles = profiles if profiles is not None else FAULT_PROFILES
+    cells = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1,) + in_shape), jnp.float32)
+    for model in models:
+        params = cnn_lib.init_cnn(jax.random.PRNGKey(0),
+                                  cnn_lib.CNN_MODELS[model], in_shape)
+        for dtype in dtypes:
+            for pname, spec in profiles.items():
+                cells.append(run_cell(model, dtype, pname, spec, seeds,
+                                      in_shape, requests, params, x,
+                                      policy=policy))
+    return {
+        "bench": "robustness",
+        "hardware": "paper-j6",
+        "in_shape": list(in_shape),
+        "requests_per_cell": requests,
+        "retry_policy": {"max_attempts": policy.max_attempts,
+                         "timeout_s": policy.timeout_s,
+                         "backoff_base_s": policy.backoff_base_s},
+        "cells": cells,
+    }
+
+
+def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
+    """Bench-contract entry: returns ``(name, us, derived)`` rows and
+    writes BENCH_robustness{_smoke}.json."""
+    if smoke:
+        seeds = seeds if seeds is not None else (0, 1, 2)
+        sweep = dict(models=SMOKE_MODELS, in_shape=(3, 96, 96),
+                     requests=4, seeds=tuple(seeds),
+                     policy=POLICY_SMOKE)
+    else:
+        seeds = seeds if seeds is not None else (0,)
+        sweep = dict(models=MODELS, requests=6, seeds=tuple(seeds))
+
+    report = {}
+
+    def build():
+        report["out"] = chaos_sweep(**sweep)
+
+    us = time_us(build, repeats=1, warmup=0)
+    out = report["out"]
+    name = "BENCH_robustness_smoke.json" if smoke \
+        else "BENCH_robustness.json"
+    path = save_json("", name, out)
+    rows = []
+    for c in out["cells"]:
+        rows.append((
+            f"robustness/{c['model']}.{c['dtype']}.{c['profile']}",
+            round(c["added_latency_p50_s"] * 1e6, 1),
+            f"success={c['success_rate']:.2f}"
+            f" p99_added={c['added_latency_p99_s']:.3f}s"
+            f" fallbacks={c['fallback_device']}"
+            f" repicks={c['repicks']}"
+            f" retx_bytes={c['retransmitted_bytes']}"))
+    n_ok = sum(c["success_rate"] == 1.0 for c in out["cells"])
+    rows.append((f"robustness/sweep[{len(out['cells'])}cells]",
+                 round(us, 1),
+                 f"all_complete={n_ok}/{len(out['cells'])} -> {path}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated link seeds (e.g. 0,1,2)")
+    args = ap.parse_args()
+    seeds = tuple(int(s) for s in args.seeds.split(",")) \
+        if args.seeds else None
+    from benchmarks.common import emit
+    emit([], header=True)
+    emit(run_all(smoke=args.smoke, seeds=seeds))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

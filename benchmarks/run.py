@@ -47,6 +47,11 @@ def main() -> None:
         sections["multicut"] = multicut_bench.run_all
     except ImportError:
         pass
+    try:
+        from benchmarks import robustness_bench
+        sections["robustness"] = robustness_bench.run_all
+    except ImportError:
+        pass
 
     emit([], header=True)
     ran = []

@@ -9,13 +9,15 @@ from repro.core.dtype_policy import (CONV_DTYPES, conv_dtype, dtype_bytes,
                                      policy_jnp_dtype)
 from repro.core.hardware import (PAPER_ENV_J6, PAPER_ENV_NOTE8, PROFILES,
                                  TPU_EDGE_CLOUD, TPU_TWO_POD, DeviceTier,
-                                 LinkProfile, TwoTierHardware, tpu_pod_tier)
+                                 LinkProfile, NetworkState, TwoTierHardware,
+                                 tpu_pod_tier)
 from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
 from repro.core.pareto import (crowding_distance, exhaustive_pareto,
                                non_dominated_sort, pareto_front_mask)
-from repro.core.smartsplit import (SplitPlan, smartsplit,
+from repro.core.smartsplit import (SplitPlan, repick_split, smartsplit,
                                    smartsplit_exhaustive)
-from repro.core.topsis import column_normalise, topsis_select
+from repro.core.topsis import (column_normalise, link_weights, topsis_rank,
+                               topsis_select)
 
 __all__ = [
     "ALGORITHMS", "coc", "cos", "ebo", "lbo", "mbo", "rs",
@@ -24,11 +26,11 @@ __all__ = [
     "total_latency",
     "CONV_DTYPES", "conv_dtype", "dtype_bytes", "policy_jnp_dtype",
     "PAPER_ENV_J6", "PAPER_ENV_NOTE8", "PROFILES", "TPU_EDGE_CLOUD",
-    "TPU_TWO_POD", "DeviceTier", "LinkProfile", "TwoTierHardware",
-    "tpu_pod_tier",
+    "TPU_TWO_POD", "DeviceTier", "LinkProfile", "NetworkState",
+    "TwoTierHardware", "tpu_pod_tier",
     "NSGA2Config", "NSGA2Result", "nsga2",
     "crowding_distance", "exhaustive_pareto", "non_dominated_sort",
     "pareto_front_mask",
-    "SplitPlan", "smartsplit", "smartsplit_exhaustive",
-    "column_normalise", "topsis_select",
+    "SplitPlan", "repick_split", "smartsplit", "smartsplit_exhaustive",
+    "column_normalise", "link_weights", "topsis_rank", "topsis_select",
 ]

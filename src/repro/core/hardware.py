@@ -110,6 +110,50 @@ class TwoTierHardware:
     link: LinkProfile
     download_bytes: float = 4096.0  # result payload d (paper Eq. 11)
 
+    def with_link_bandwidth(self, bandwidth: float) -> "TwoTierHardware":
+        """The same environment under a different link bandwidth (bytes/s)
+        -- the runtime re-pick path re-evaluates the cached Pareto front
+        against this instead of mutating the planning profile."""
+        if bandwidth <= 0:
+            raise ValueError(f"bandwidth must be positive, got {bandwidth}")
+        link = dataclasses.replace(self.link, bandwidth=float(bandwidth))
+        return dataclasses.replace(self, link=link)
+
+
+@dataclasses.dataclass
+class NetworkState:
+    """Mutable runtime view of a link (deliberately NOT frozen).
+
+    Every planning-side profile above is immutable; what *changes* at run
+    time is the network.  ``NetworkState`` carries the current effective
+    bandwidth estimate (fed by the runtime's EWMA link estimator) next to
+    the nominal ``LinkProfile`` the plan assumed, so degradation is always
+    a ratio against the planning assumption."""
+
+    base: LinkProfile
+    effective_bandwidth: float = 0.0   # bytes/s; 0 -> base.bandwidth
+    outage: bool = False               # link currently unusable
+
+    def __post_init__(self):
+        if self.effective_bandwidth <= 0.0:
+            self.effective_bandwidth = self.base.bandwidth
+
+    @property
+    def degradation(self) -> float:
+        """planned/effective bandwidth: 1 = nominal, >1 = degraded --
+        exactly the ratio ``topsis.link_weights`` consumes."""
+        return self.base.bandwidth / self.effective_bandwidth
+
+    def update(self, bandwidth: float, outage: bool = False) -> None:
+        if bandwidth > 0:
+            self.effective_bandwidth = float(bandwidth)
+        self.outage = outage
+
+    def effective_link(self) -> LinkProfile:
+        """The nominal profile rebased on the current estimate."""
+        return dataclasses.replace(self.base,
+                                   bandwidth=self.effective_bandwidth)
+
 
 # ---------------------------------------------------------------------------
 # Paper-faithful profiles (Section III / VI of the paper).

@@ -16,7 +16,7 @@ from repro.core.costs import (ModelProfile, evaluate_objectives,
 from repro.core.hardware import TwoTierHardware
 from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
 from repro.core.pareto import exhaustive_pareto
-from repro.core.topsis import topsis_select
+from repro.core.topsis import link_weights, topsis_select
 
 _PENALTY = 1e30
 
@@ -81,6 +81,51 @@ def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
                      objectives=tuple(float(x) for x in F_all[l1]),
                      pareto_indices=tuple(int(x) for x in pareto_l1),
                      pareto_F=pareto_F, hardware=hw.client.name)
+
+
+def repick_split(plan: SplitPlan, profile: ModelProfile,
+                 hw: TwoTierHardware, *,
+                 bandwidth: float | None = None,
+                 exclude: tuple[int, ...] = (),
+                 weights: np.ndarray | None = None,
+                 f3_mode: str = "full") -> SplitPlan:
+    """Runtime TOPSIS re-pick over a plan's already-computed Pareto front.
+
+    The GA never re-runs: ``plan.pareto_indices`` is the front computed at
+    plan time, and split-index Pareto optimality is bandwidth-independent
+    for the paper's cost structure (every objective row is affine in 1/B
+    through the same boundary term, so dominance among front members is
+    re-decided by TOPSIS, not re-enumeration).  This re-evaluates only the
+    closed-form objective matrix under the *current* link bandwidth --
+    vectorised numpy over <= L rows, microseconds -- and re-runs the
+    selection with link-degradation re-weighting (``topsis.link_weights``).
+
+    bandwidth: current effective bytes/s (EWMA estimate); None keeps the
+      planning bandwidth and just re-selects (e.g. after an ``exclude``).
+    exclude: split indices already tried and failed for this inference --
+      the degradation loop walks the front without repeating itself.
+    weights: explicit TOPSIS weights; default derives them from the
+      planned/current bandwidth ratio.
+
+    Raises ValueError when no feasible non-excluded front member remains
+    (the caller falls back or surfaces the outage)."""
+    ratio = 1.0
+    if bandwidth is not None:
+        ratio = hw.link.bandwidth / bandwidth
+        hw = hw.with_link_bandwidth(bandwidth)
+    F_all = evaluate_objectives(profile, hw, f3_mode)
+    idx = np.asarray(plan.pareto_indices, int)
+    feas = feasible_mask(profile, hw)[idx]
+    if exclude:
+        feas &= ~np.isin(idx, np.asarray(list(exclude), int))
+    if weights is None and ratio != 1.0:
+        weights = link_weights(ratio)
+    pick = topsis_select(F_all[idx], feasible=feas, weights=weights)
+    l1 = int(idx[pick])
+    return dataclasses.replace(
+        plan, split_index=l1,
+        objectives=tuple(float(x) for x in F_all[l1]),
+        pareto_F=F_all[idx], hardware=hw.client.name)
 
 
 def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,

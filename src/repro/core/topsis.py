@@ -8,6 +8,8 @@ it.  The classical TOPSIS closeness coefficient (distance to anti-ideal /
 that is the default everywhere."""
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 
@@ -19,11 +21,16 @@ def column_normalise(F: np.ndarray) -> np.ndarray:
     return F / norms
 
 
-def topsis_select(F: np.ndarray,
-                  feasible: np.ndarray | None = None,
-                  weights: np.ndarray | None = None,
-                  use_anti_ideal: bool = False) -> int:
-    """Return the index (into F's rows) of the TOPSIS-chosen solution.
+def topsis_rank(F: np.ndarray,
+                feasible: np.ndarray | None = None,
+                weights: np.ndarray | None = None,
+                use_anti_ideal: bool = False) -> np.ndarray:
+    """Full TOPSIS preference order: feasible row indices, best first.
+
+    Same normalisation/weighting/distance as ``topsis_select`` -- the
+    selection is ``rank[0]`` -- but exposing the whole ordering lets the
+    fault-tolerant runtime walk "next-best feasible split" without
+    re-running the analysis after each failure.
 
     F: (n, m) objective matrix, all objectives minimised.
     feasible: optional boolean mask; infeasible rows are removed before the
@@ -47,8 +54,41 @@ def topsis_select(F: np.ndarray,
         d_minus = np.sqrt(((Fn - anti) ** 2).sum(axis=1))
         denom = d_plus + d_minus
         denom = np.where(denom == 0, 1.0, denom)
-        closeness = d_minus / denom
-        best = int(np.argmax(closeness))
+        # maximise closeness == minimise -closeness (stable sort keeps the
+        # first-listed solution on ties, matching argmax/argmin semantics)
+        order = np.argsort(-d_minus / denom, kind="stable")
     else:
-        best = int(np.argmin(d_plus))
-    return int(idx[best])
+        order = np.argsort(d_plus, kind="stable")
+    return idx[order]
+
+
+def topsis_select(F: np.ndarray,
+                  feasible: np.ndarray | None = None,
+                  weights: np.ndarray | None = None,
+                  use_anti_ideal: bool = False) -> int:
+    """Return the index (into F's rows) of the TOPSIS-chosen solution.
+
+    See ``topsis_rank`` for parameter semantics; this is ``rank[0]``."""
+    return int(topsis_rank(F, feasible=feasible, weights=weights,
+                           use_anti_ideal=use_anti_ideal)[0])
+
+
+def link_weights(bandwidth_ratio: float,
+                 base: tuple[float, float, float] = (1.0, 1.0, 1.0)
+                 ) -> np.ndarray:
+    """Per-objective TOPSIS weights for a re-pick under a changed link.
+
+    ``bandwidth_ratio`` is planned/current bandwidth (> 1 means the link
+    degraded).  The latency objective f1 carries the upload term I|l1 / B
+    linearly, so its weight scales by the full ratio; client energy f2
+    contains the radio term (also ~1/B) diluted by compute energy, so it
+    scales by sqrt(ratio); the memory objective f3 is link-independent.
+    Under a degraded link this steers the pick toward splits with smaller
+    boundary payloads; ratio 1 reduces to ``base`` (classic TOPSIS)."""
+    r = float(bandwidth_ratio)
+    if not np.isfinite(r) or r <= 0:
+        raise ValueError(f"bandwidth_ratio must be positive, got {r}")
+    w = np.asarray(base, float).copy()
+    w[0] *= r
+    w[1] *= math.sqrt(r)
+    return w

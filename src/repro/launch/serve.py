@@ -2,7 +2,14 @@
 
 Boots the bucketed batch engine on the reduced config, optionally planning
 the SmartSplit placement first (prints the chosen split and its predicted
-objective triple)."""
+objective triple).
+
+``--cnn <model>`` instead serves one of the paper's CNNs through the
+fault-tolerant split runtime (``repro.runtime``): plans the split on the
+paper hardware environment, executes requests across a ``FaultyLink``
+whose fault profile comes from ``REPRO_LINK_*`` env knobs (or ``--drop``),
+and reports recoveries -- retries, device fallbacks, Pareto-front
+re-picks -- next to throughput."""
 from __future__ import annotations
 
 import argparse
@@ -23,10 +30,58 @@ from repro.models.profiles import transformer_profile
 from repro.serving.engine import Engine
 
 
+def serve_cnn(args) -> None:
+    """Fault-tolerant CNN split serving (the paper's actual workload)."""
+    from repro.core import PAPER_ENV_J6, smartsplit_exhaustive
+    from repro.models import cnn as cnn_lib
+    from repro.models.profiles import cnn_profile
+    from repro.runtime import FaultSpec, RetryPolicy, SplitRuntime, \
+        link_from_env
+
+    policy = conv_dtype(args.dtype)
+    hw = PAPER_ENV_J6
+    prof = cnn_profile(args.cnn, dtype=policy)
+    plan = smartsplit_exhaustive(prof, hw)
+    lat, en, mem = plan.objectives
+    print(f"SmartSplit: l1={plan.split_index}/{prof.num_layers} "
+          f"latency={lat:.2e}s energy={en:.2e}J "
+          f"client-mem={mem / 2**20:.1f}MiB ({policy})")
+
+    faults = FaultSpec(drop_rate=args.drop) if args.drop else None
+    link = link_from_env(hw.link.bandwidth, faults=faults)
+    rt = SplitRuntime(args.cnn, cnn_lib.init_cnn(
+        jax.random.PRNGKey(0), cnn_lib.CNN_MODELS[args.cnn]),
+        plan, prof, hw, link=link, dtype=policy,
+        policy=RetryPolicy.from_env())
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1,) + cnn_lib.INPUT_SHAPE),
+                    jnp.float32)
+    t0 = time.perf_counter()
+    for _ in range(args.requests):
+        r = rt.infer(x)
+        jax.block_until_ready(r.logits)
+    dt = time.perf_counter() - t0
+    s = rt.stats()
+    print(f"served {s['requests']} requests in {dt:.1f}s "
+          f"({s['requests'] / dt:.2f} req/s); recovered={s['recovered']} "
+          f"fallback_device={s['fallback_device']} "
+          f"repicks={s['repicks']} "
+          f"proactive={s['proactive_resplits']} "
+          f"link={s['link']['sends']} sends / "
+          f"{s['link']['dropped']} dropped / "
+          f"{s['link']['timeouts']} timeouts")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b",
                     choices=sorted(all_configs()))
+    ap.add_argument("--cnn", default=None,
+                    help="serve a paper CNN through the fault-tolerant "
+                         "split runtime instead (alexnet/vgg16/...)")
+    ap.add_argument("--drop", type=float, default=0.0,
+                    help="--cnn only: injected per-attempt drop rate "
+                         "(REPRO_LINK_* env knobs cover the rest)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -35,6 +90,10 @@ def main():
                     help="boundary/storage dtype policy for --plan-split "
                          "(default: REPRO_CONV_DTYPE, else fp32)")
     args = ap.parse_args()
+
+    if args.cnn:
+        serve_cnn(args)
+        return
 
     cfg = all_configs()[args.arch].reduced()
     cfg = dataclasses.replace(cfg, vocab_size=min(cfg.vocab_size, 512))
@@ -64,12 +123,14 @@ def main():
         reqs.append(eng.submit(rng.integers(0, cfg.vocab_size,
                                             plen).tolist(),
                                max_new_tokens=args.max_new_tokens))
-    t0 = time.time()
+    t0 = time.perf_counter()
     eng.run_until_idle()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests / {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s, {int(eng.stats['batches'])} batches)")
+          f"({toks / dt:.1f} tok/s, {int(eng.stats['batches'])} batches, "
+          f"p50={eng.stats['latency_p50_s'] * 1e3:.0f}ms "
+          f"p99={eng.stats['latency_p99_s'] * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

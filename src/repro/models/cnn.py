@@ -512,6 +512,10 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
     weight/activation storage, fp32 matmul), so the analytic profile's
     per-layer weight and activation bytes match the runtime everywhere."""
     stop = len(layers) if stop is None else stop
+    if not 0 <= start <= stop <= len(layers):
+        raise ValueError(
+            f"apply_cnn: need 0 <= start <= stop <= {len(layers)} "
+            f"(L), got start={start}, stop={stop}")
     bk = conv_backend(backend)
     dt = conv_dtype(dtype)
     if dt != "fp32":
@@ -550,7 +554,15 @@ def apply_split(layers: list[Layer], params, x, split_index: int,
     Returns (logits, boundary_payload) so callers can account the transfer.
     Under the bf16 storage policy the boundary tensor is serialized in
     bfloat16 -- exactly the halved I|l1 the dtype-aware cost model feeds
-    the optimiser."""
+    the optimiser.
+
+    ``split_index`` must lie in [0, L]: the degenerate ends are the
+    paper's COC (l1=0, boundary = the input upload) and COS-like
+    all-on-device placement (l1=L, nothing crosses the link)."""
+    if not 0 <= split_index <= len(layers):
+        raise ValueError(
+            f"apply_split: split_index must be in [0, {len(layers)}] "
+            f"(L={len(layers)} layers), got {split_index}")
     boundary = apply_cnn(layers, params, x, start=0, stop=split_index,
                          backend=backend, dtype=dtype)
     logits = apply_cnn(layers, params, boundary, start=split_index,

@@ -24,20 +24,25 @@ from repro.models import cnn as cnn_lib
 def cnn_profile(name: str, batch: int = 1,
                 dtype_bytes: int | None = None,
                 in_shape: tuple = cnn_lib.INPUT_SHAPE,
-                dtype: str | None = None) -> ModelProfile:
+                dtype: str | None = None,
+                layers: list | None = None) -> ModelProfile:
     """Analytic profile under a storage-dtype policy.
 
     ``dtype`` (``fp32`` | ``bf16``; default resolves ``REPRO_CONV_DTYPE``)
     scales every byte term -- weights, activations, boundary payloads, the
     input upload -- so NSGA-II/TOPSIS sees the memory and transfer costs
     the bf16 execution path actually incurs.  ``dtype_bytes`` overrides
-    the per-element size directly (back-compat escape hatch)."""
+    the per-element size directly (back-compat escape hatch).  ``layers``
+    profiles an explicit layer list under ``name`` instead of looking the
+    name up in ``CNN_MODELS`` -- the split runtime's tests plan against
+    tiny synthetic CNNs through exactly this path."""
     policy = conv_dtype(dtype)
     if dtype_bytes is None:
         dtype_bytes = policy_bytes(policy)
     else:
         policy = {4: "fp32", 2: "bf16"}.get(dtype_bytes, policy)
-    layers = cnn_lib.CNN_MODELS[name]
+    if layers is None:
+        layers = cnn_lib.CNN_MODELS[name]
     shapes = cnn_lib.shapes_through(layers, in_shape)
     profs = []
     shape = in_shape

@@ -1,0 +1,24 @@
+"""Fault-tolerant split-execution runtime: flaky-link channel model,
+reliable transfer (checksum/retry/timeout/backoff), EWMA link estimation,
+structured recovery events, and the ``SplitRuntime`` degradation loop
+(device fallback / cached-Pareto-front TOPSIS re-picks)."""
+from repro.runtime.events import Event, EventLog
+from repro.runtime.faults import (FaultSpec, FaultyLink, LinkDropped,
+                                  LinkError, LinkOutage, LinkTimeout,
+                                  link_from_env, parse_outages)
+from repro.runtime.link_estimator import EwmaLinkEstimator
+from repro.runtime.runtime import (InferenceResult, SplitRuntime,
+                                   SplitUnrecoverable)
+from repro.runtime.transfer import (ChecksumError, RetryPolicy,
+                                    TransferFailed, TransferOutcome,
+                                    send_with_retry)
+
+__all__ = [
+    "Event", "EventLog",
+    "FaultSpec", "FaultyLink", "LinkDropped", "LinkError", "LinkOutage",
+    "LinkTimeout", "link_from_env", "parse_outages",
+    "EwmaLinkEstimator",
+    "InferenceResult", "SplitRuntime", "SplitUnrecoverable",
+    "ChecksumError", "RetryPolicy", "TransferFailed", "TransferOutcome",
+    "send_with_retry",
+]

@@ -1,0 +1,248 @@
+"""Seeded, deterministic flaky-link channel model.
+
+The planner (core/smartsplit.py) chooses a split against a *nominal*
+client->server link; the runtime executes against this one, which can
+degrade, drop, corrupt, delay, or black out entirely.  Everything is
+simulated on a **virtual clock** driven only by link activity (transfer
+time, timeouts, backoff waits), so fault schedules are bit-reproducible
+from a seed and a send sequence -- no real sleeps, no wall-clock in the
+loop -- and a whole chaos sweep runs in milliseconds of host time.
+
+Fault taxonomy (one uniform draw per category per send, so the fault
+schedule for a given seed is independent of payload sizes and outcomes):
+
+* **drop**     -- the payload vanishes in flight; the sender learns
+                  nothing until its per-attempt timeout expires.
+* **corrupt**  -- the payload arrives with a flipped byte.  The link
+                  itself stays silent: detection is the transfer layer's
+                  job (crc32, see runtime/transfer.py), which is exactly
+                  why the checksum exists.
+* **delay**    -- the transfer takes ``delay_s`` longer; if that pushes
+                  it past the timeout the sender sees a timeout.
+* **outage**   -- wall of silence during configured virtual-time windows;
+                  every send inside one burns its full timeout.
+
+Bandwidth/latency come from either a constant or a piecewise-constant
+profile over virtual time, so sustained degradation (the EWMA estimator's
+trigger) is expressible without any fault randomness at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+ENV_PREFIX = "REPRO_LINK_"
+
+
+class LinkError(RuntimeError):
+    """One failed transfer attempt; ``elapsed_s`` is the virtual time the
+    attempt consumed (the link clock has already advanced by it)."""
+
+    def __init__(self, msg: str, elapsed_s: float):
+        super().__init__(msg)
+        self.elapsed_s = elapsed_s
+
+
+class LinkDropped(LinkError):
+    """Payload lost in flight (sender observed a timeout)."""
+
+
+class LinkTimeout(LinkError):
+    """Transfer could not complete within the per-attempt timeout."""
+
+
+class LinkOutage(LinkError):
+    """Send fell inside a configured outage window."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Injectable fault rates + outage windows (virtual-time seconds)."""
+
+    drop_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    delay_rate: float = 0.0
+    delay_s: float = 0.0
+    outages: tuple[tuple[float, float], ...] = ()
+
+    def __post_init__(self):
+        for field in ("drop_rate", "corrupt_rate", "delay_rate"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{field} must be in [0, 1], got {v}")
+        if self.delay_s < 0:
+            raise ValueError(f"delay_s must be >= 0, got {self.delay_s}")
+        for start, end in self.outages:
+            if end <= start:
+                raise ValueError(f"outage window ({start}, {end}) is empty")
+
+    @property
+    def fault_free(self) -> bool:
+        return (self.drop_rate == 0.0 and self.corrupt_rate == 0.0
+                and self.delay_rate == 0.0 and not self.outages)
+
+
+class FaultyLink:
+    """A client->server channel with seeded, injectable faults.
+
+    bandwidth: nominal bytes/s (e.g. ``hw.link.bandwidth``).
+    latency_s: fixed per-transfer propagation latency.
+    faults: the ``FaultSpec`` to inject.
+    seed: PRNG seed; same seed + same send sequence => same fault schedule.
+    bandwidth_profile: optional piecewise-constant schedule
+      ``((start_s, bytes_per_s), ...)`` overriding ``bandwidth`` from each
+      start time onward -- models sustained degradation (walking out of
+      Wi-Fi range) as opposed to point faults.
+    """
+
+    def __init__(self, bandwidth: float, *, latency_s: float = 0.0,
+                 faults: FaultSpec = FaultSpec(), seed: int = 0,
+                 bandwidth_profile: tuple[tuple[float, float], ...] = ()):
+        if bandwidth <= 0:
+            raise ValueError(f"bandwidth must be positive, got {bandwidth}")
+        self.bandwidth = float(bandwidth)
+        self.latency_s = float(latency_s)
+        self.faults = faults
+        self.seed = int(seed)
+        self.bandwidth_profile = tuple(sorted(bandwidth_profile))
+        self._rng = np.random.default_rng(self.seed)
+        self.clock = 0.0          # virtual seconds of link activity
+        # counters (all attempts, successful or not)
+        self.sends = 0
+        self.delivered = 0
+        self.dropped = 0
+        self.timeouts = 0
+        self.outage_hits = 0
+        self.corrupted = 0
+        self.bytes_delivered = 0
+        self.bytes_lost = 0
+
+    # -- clock ---------------------------------------------------------
+    def advance(self, seconds: float) -> None:
+        """Spend non-transfer virtual time on the clock (backoff waits)."""
+        if seconds < 0:
+            raise ValueError(f"cannot advance by {seconds}")
+        self.clock += seconds
+
+    def bandwidth_at(self, t: float) -> float:
+        """Effective bytes/s at virtual time ``t``."""
+        bw = self.bandwidth
+        for start, seg_bw in self.bandwidth_profile:
+            if t >= start:
+                bw = seg_bw
+        return bw
+
+    def in_outage(self, t: float) -> bool:
+        return any(start <= t < end for start, end in self.faults.outages)
+
+    def outage_overlaps(self, t0: float, t1: float) -> bool:
+        """True when [t0, t1) intersects any outage window: a transfer in
+        flight when the link blacks out dies too, not just one that
+        *starts* during the window."""
+        return any(start < t1 and t0 < end
+                   for start, end in self.faults.outages)
+
+    # -- transfer ------------------------------------------------------
+    def send(self, data: bytes, timeout_s: float) -> tuple[bytes, float]:
+        """Attempt one transfer.  Returns ``(delivered, elapsed_s)`` and
+        advances the clock; raises ``LinkDropped`` / ``LinkTimeout`` /
+        ``LinkOutage`` on failure (clock advanced by the timeout either
+        way -- a failed attempt is never free).  A *corrupted* delivery
+        returns normally with a flipped byte: callers must checksum."""
+        if timeout_s <= 0:
+            raise ValueError(f"timeout_s must be positive, got {timeout_s}")
+        self.sends += 1
+        n = len(data)
+        t0 = self.clock
+        # Draw every category each send so the schedule is size-invariant
+        # (a scaled uniform, not integers(0, n): bounded-int draws consume
+        # a size-dependent amount of the stream via rejection sampling).
+        u_drop, u_corrupt, u_delay, u_pos = self._rng.uniform(size=4)
+        corrupt_at = min(int(u_pos * n), n - 1) if n else 0
+        xfer = self.latency_s + n / self.bandwidth_at(t0)
+        if u_delay < self.faults.delay_rate:
+            xfer += self.faults.delay_s
+        if self.outage_overlaps(t0, t0 + min(xfer, timeout_s)):
+            self.outage_hits += 1
+            self.bytes_lost += n
+            self.clock = t0 + timeout_s
+            raise LinkOutage(f"outage window at t={t0:.3f}s", timeout_s)
+        if u_drop < self.faults.drop_rate:
+            self.dropped += 1
+            self.bytes_lost += n
+            self.clock = t0 + timeout_s
+            raise LinkDropped(f"payload dropped at t={t0:.3f}s", timeout_s)
+        if xfer > timeout_s:
+            self.timeouts += 1
+            self.bytes_lost += n
+            self.clock = t0 + timeout_s
+            raise LinkTimeout(
+                f"transfer needs {xfer:.3f}s > timeout {timeout_s:.3f}s",
+                timeout_s)
+        self.clock = t0 + xfer
+        self.delivered += 1
+        self.bytes_delivered += n
+        if u_corrupt < self.faults.corrupt_rate and n:
+            self.corrupted += 1
+            out = bytearray(data)
+            out[corrupt_at] ^= 0xFF
+            return bytes(out), xfer
+        return bytes(data), xfer
+
+    def counters(self) -> dict[str, int | float]:
+        return {"sends": self.sends, "delivered": self.delivered,
+                "dropped": self.dropped, "timeouts": self.timeouts,
+                "outage_hits": self.outage_hits,
+                "corrupted": self.corrupted,
+                "bytes_delivered": self.bytes_delivered,
+                "bytes_lost": self.bytes_lost, "clock_s": self.clock}
+
+
+def _env_float(name: str, default: float) -> float:
+    raw = os.environ.get(ENV_PREFIX + name)
+    return default if raw is None else float(raw)
+
+
+def parse_outages(raw: str) -> tuple[tuple[float, float], ...]:
+    """Parse ``"start:end[,start:end...]"`` (seconds) outage windows."""
+    windows = []
+    for part in raw.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        start, _, end = part.partition(":")
+        windows.append((float(start), float(end)))
+    return tuple(windows)
+
+
+def link_from_env(bandwidth: float, *, seed: int | None = None,
+                  faults: FaultSpec | None = None) -> FaultyLink:
+    """Build a ``FaultyLink`` from ``REPRO_LINK_*`` env knobs.
+
+    REPRO_LINK_BW        bytes/s (default: the ``bandwidth`` argument,
+                         normally the plan's nominal link)
+    REPRO_LINK_LATENCY   fixed per-transfer latency, seconds (default 0)
+    REPRO_LINK_DROP      drop probability per attempt      (default 0)
+    REPRO_LINK_CORRUPT   corruption probability per attempt (default 0)
+    REPRO_LINK_DELAY     delay-fault probability per attempt (default 0)
+    REPRO_LINK_DELAY_S   extra seconds when a delay fires  (default 0.5)
+    REPRO_LINK_OUTAGES   "start:end[,start:end]" virtual-time windows
+    REPRO_LINK_SEED      fault-schedule seed (default 0)
+
+    Explicit ``faults``/``seed`` arguments win over the environment."""
+    if faults is None:
+        faults = FaultSpec(
+            drop_rate=_env_float("DROP", 0.0),
+            corrupt_rate=_env_float("CORRUPT", 0.0),
+            delay_rate=_env_float("DELAY", 0.0),
+            delay_s=_env_float("DELAY_S", 0.5),
+            outages=parse_outages(os.environ.get(ENV_PREFIX + "OUTAGES",
+                                                 "")),
+        )
+    if seed is None:
+        seed = int(_env_float("SEED", 0))
+    return FaultyLink(_env_float("BW", bandwidth),
+                      latency_s=_env_float("LATENCY", 0.0),
+                      faults=faults, seed=seed)

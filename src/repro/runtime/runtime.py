@@ -1,0 +1,271 @@
+"""Fault-tolerant split-execution runtime.
+
+``models.cnn.apply_split`` assumes the client->server link never fails;
+``SplitRuntime`` wraps the same client/boundary/server walk in a recovery
+loop so one link hiccup no longer hangs the "optimal" split:
+
+1. client stage runs layers [0, l1) exactly as ``apply_split`` would;
+2. the boundary payload crosses a ``FaultyLink`` through the reliable
+   transfer layer (crc32 + per-attempt timeout + bounded retries with
+   exponential backoff, see runtime/transfer.py);
+3. on success the server stage runs [l1, L) on the delivered (verified,
+   bit-identical) payload;
+4. on retry exhaustion the runtime degrades *gracefully*: if the client
+   memory budget admits the whole model it continues from the boundary
+   activation on-device (bit-identical logits, latency paid instead of an
+   error); otherwise it re-picks the next-best feasible split from the
+   plan's cached Pareto front via TOPSIS with link-weight re-weighting
+   (``core.smartsplit.repick_split`` -- microseconds, no GA re-run) and
+   tries again, never repeating a failed split index.
+
+An EWMA estimator (runtime/link_estimator.py) folds every observed
+transfer into an effective-bandwidth estimate; sustained degradation
+triggers a *proactive* re-split at the next request instead of burning
+retries against a link the runtime already knows is bad.  Every recovery
+action lands in the structured ``EventLog`` -- the invariant tests and
+the chaos harness (benchmarks/robustness_bench.py) both key on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import ModelProfile
+from repro.core.hardware import NetworkState, TwoTierHardware
+from repro.core.smartsplit import SplitPlan, repick_split
+from repro.models import cnn as cnn_lib
+from repro.runtime import events as ev
+from repro.runtime.events import Event, EventLog
+from repro.runtime.faults import FaultyLink
+from repro.runtime.link_estimator import EwmaLinkEstimator
+from repro.runtime.transfer import (RetryPolicy, TransferFailed,
+                                    send_with_retry)
+
+
+class SplitUnrecoverable(RuntimeError):
+    """Transfer failed, on-device fallback infeasible, Pareto front
+    exhausted: the request cannot complete."""
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceResult:
+    """One request's outcome + the recovery evidence behind it."""
+
+    logits: jnp.ndarray
+    split_index: int             # split that actually produced the logits
+    planned_split: int           # active plan's split when the request began
+    degraded: bool               # any fallback / re-pick happened
+    on_device: bool              # completed without the server stage
+    attempts: int                # wire attempts across all splits tried
+    link_elapsed_s: float        # virtual link time (transfers + backoff)
+    wire_bytes: int              # bytes put on the wire (incl. retransmits)
+    goodput_bytes: int           # useful bytes delivered
+    events: tuple[Event, ...]    # this request's slice of the event log
+
+    @property
+    def retransmitted_bytes(self) -> int:
+        return self.wire_bytes - self.goodput_bytes
+
+
+class SplitRuntime:
+    """Executes a ``SplitPlan`` for one CNN over a (possibly faulty) link.
+
+    model: a name from ``cnn.CNN_MODELS`` or an explicit layer list.
+    params: the layer parameters (``cnn.init_cnn``).
+    plan: the optimiser's pick, with its cached Pareto front.
+    profile: the ``ModelProfile`` the plan was computed from (same dtype
+      policy and input shape -- re-pick feasibility is judged against it).
+    hw: the planning environment (client memory budget, nominal link).
+    link: the channel to execute against (default: a fault-free
+      ``FaultyLink`` at the plan's nominal bandwidth).
+    policy: transfer-layer retry/timeout/backoff knobs.
+    device_fallback: None (default) = allowed iff the whole model fits the
+      client memory budget; True/False forces the decision (benches use
+      False to exercise the re-pick path on roomy clients).
+    resplit_ratio: proactive re-split trigger -- re-pick before the next
+      request once planned/estimated bandwidth exceeds this.
+    """
+
+    def __init__(self, model: str | list, params, plan: SplitPlan,
+                 profile: ModelProfile, hw: TwoTierHardware, *,
+                 link: FaultyLink | None = None,
+                 policy: RetryPolicy = RetryPolicy(),
+                 backend: str | None = None, dtype: str | None = None,
+                 device_fallback: bool | None = None,
+                 estimator_alpha: float = 0.3,
+                 resplit_ratio: float = 2.0,
+                 jitter_seed: int = 0,
+                 log: EventLog | None = None):
+        self.layers = cnn_lib.CNN_MODELS[model] if isinstance(model, str) \
+            else model
+        if profile.num_layers != len(self.layers):
+            raise ValueError(
+                f"profile has {profile.num_layers} layers, model has "
+                f"{len(self.layers)}: plan and runtime would disagree")
+        self.params = params
+        self.plan = plan                     # active (may be re-picked)
+        self.profile = profile
+        self.hw = hw
+        self.link = link if link is not None \
+            else FaultyLink(hw.link.bandwidth)
+        self.policy = policy
+        self.backend = backend
+        self.dtype = dtype
+        self.device_fallback = device_fallback
+        self.resplit_ratio = float(resplit_ratio)
+        self.estimator = EwmaLinkEstimator(hw.link.bandwidth,
+                                           alpha=estimator_alpha)
+        self.net = NetworkState(hw.link)
+        self.log = log if log is not None else EventLog()
+        self._jitter_rng = np.random.default_rng(jitter_seed)
+        # aggregate counters (the chaos harness reads these)
+        self.n_requests = 0
+        self.n_recovered = 0        # completed despite >= 1 failed attempt
+        self.n_fallback_device = 0
+        self.n_repicks = 0
+        self.n_proactive = 0
+
+    # -- stages --------------------------------------------------------
+    def _run(self, x, start: int, stop: int):
+        return cnn_lib.apply_cnn(self.layers, self.params, x, start=start,
+                                 stop=stop, backend=self.backend,
+                                 dtype=self.dtype)
+
+    @staticmethod
+    def _serialize(arr) -> tuple[bytes, np.ndarray]:
+        host = np.ascontiguousarray(np.asarray(arr))
+        return host.tobytes(), host
+
+    @staticmethod
+    def _deserialize(data: bytes, like: np.ndarray) -> jnp.ndarray:
+        host = np.frombuffer(data, dtype=like.dtype).reshape(like.shape)
+        return jnp.asarray(host)
+
+    # -- degradation helpers -------------------------------------------
+    def _device_ok(self) -> bool:
+        if self.device_fallback is not None:
+            return self.device_fallback
+        full_mem = float(self.profile.cum_mem()[-1])
+        return full_mem <= self.hw.client.memory_budget
+
+    def _repick(self, exclude: tuple[int, ...],
+                kind: str) -> SplitPlan | None:
+        """Next-best feasible split under the current bandwidth estimate;
+        None when the front is exhausted."""
+        try:
+            new = repick_split(self.plan, self.profile, self.hw,
+                               bandwidth=self.estimator.bandwidth,
+                               exclude=exclude)
+        except ValueError:
+            return None
+        if kind == ev.PROACTIVE_RESPLIT and \
+                new.split_index == self.plan.split_index:
+            return None                      # estimate agrees with plan
+        self.log.emit(kind, self.link.clock,
+                      old_split=self.plan.split_index,
+                      new_split=new.split_index,
+                      est_bandwidth=self.estimator.bandwidth,
+                      degradation=self.estimator.degradation())
+        return new
+
+    def _maybe_proactive_resplit(self) -> None:
+        if self.estimator.degradation() < self.resplit_ratio:
+            return
+        new = self._repick(exclude=(), kind=ev.PROACTIVE_RESPLIT)
+        if new is not None:
+            self.plan = new
+            self.n_proactive += 1
+
+    # -- the request loop ----------------------------------------------
+    def infer(self, x) -> InferenceResult:
+        """Run one request to completion (or raise SplitUnrecoverable).
+
+        The returned logits are bit-identical to the fault-free
+        ``apply_split`` run whenever the executed split equals the planned
+        one (clean transfer after any retries, or on-device continuation);
+        a re-picked split is a *different* placement of the same exact
+        computation -- still the fault-free logits of that split."""
+        self.n_requests += 1
+        mark = len(self.log)
+        self._maybe_proactive_resplit()
+        planned = self.plan.split_index
+        L = len(self.layers)
+        attempts = 0
+        wire = goodput = 0
+        t0 = self.link.clock
+        tried: tuple[int, ...] = ()
+        l1 = planned
+        while True:
+            boundary = self._run(x, 0, l1)
+            if l1 == L:                      # everything on the client
+                logits = boundary
+                on_device = True
+                break
+            data, host = self._serialize(boundary)
+            try:
+                out = send_with_retry(self.link, data, self.policy,
+                                      rng=self._jitter_rng, log=self.log,
+                                      what=f"boundary@l1={l1}")
+                attempts += out.attempts
+                wire += out.wire_bytes
+                goodput += out.goodput_bytes
+                self.estimator.observe(out.goodput_bytes,
+                                       out.success_elapsed_s)
+                self.net.update(self.estimator.bandwidth)
+                logits = self._run(self._deserialize(out.payload, host),
+                                   l1, L)
+                on_device = False
+                break
+            except TransferFailed as fail:
+                attempts += fail.attempts
+                wire += fail.wire_bytes
+                # the link burned fail.elapsed_s and delivered nothing
+                self.estimator.observe(0.0, fail.elapsed_s)
+                self.net.update(self.estimator.bandwidth, outage=True)
+                tried = tried + (l1,)
+                if self._device_ok():
+                    self.log.emit(ev.FALLBACK_DEVICE, self.link.clock,
+                                  split=l1, attempts=fail.attempts)
+                    self.n_fallback_device += 1
+                    logits = self._run(boundary, l1, L)
+                    on_device = True
+                    break
+                new = self._repick(exclude=tried, kind=ev.REPICK)
+                if new is None:
+                    self.log.emit(ev.UNRECOVERABLE, self.link.clock,
+                                  tried=list(tried))
+                    raise SplitUnrecoverable(
+                        f"transfer failed at splits {list(tried)}; "
+                        f"on-device fallback infeasible and Pareto front "
+                        f"exhausted") from fail
+                self.plan = new
+                self.n_repicks += 1
+                l1 = new.split_index
+        self.net.update(self.estimator.bandwidth, outage=False)
+        degraded = bool(tried) or l1 != planned
+        if degraded or attempts > 1:
+            self.n_recovered += 1
+        return InferenceResult(
+            logits=logits, split_index=l1, planned_split=planned,
+            degraded=degraded, on_device=on_device, attempts=attempts,
+            link_elapsed_s=self.link.clock - t0, wire_bytes=wire,
+            goodput_bytes=goodput,
+            events=tuple(self.log.since(mark)))
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate counters + link counters + event-kind histogram."""
+        return {
+            "requests": self.n_requests,
+            "recovered": self.n_recovered,
+            "fallback_device": self.n_fallback_device,
+            "repicks": self.n_repicks,
+            "proactive_resplits": self.n_proactive,
+            "active_split": self.plan.split_index,
+            "est_bandwidth": self.estimator.bandwidth,
+            "degradation": self.estimator.degradation(),
+            "link": self.link.counters(),
+            "events": self.log.counts(),
+        }

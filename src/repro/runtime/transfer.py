@@ -1,0 +1,158 @@
+"""Reliable transfer over a ``FaultyLink``: checksum, timeout, retries,
+exponential backoff with seeded jitter.
+
+One call = one logical boundary-payload upload.  Each wire attempt carries
+the payload plus a small framing header (crc32 + length); a delivered-but-
+corrupt payload fails checksum verification and retries exactly like a
+drop -- the caller NEVER sees corrupted bytes, which is what makes the
+runtime's "bit-identical or recorded fallback" guarantee possible.
+Backoff waits are spent on the link's virtual clock (seeded jitter keeps
+the schedule deterministic), so retry storms interact correctly with
+outage windows and time-varying bandwidth profiles."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+
+import numpy as np
+
+from repro.runtime import events as ev
+from repro.runtime.events import EventLog
+from repro.runtime.faults import (ENV_PREFIX, FaultyLink, LinkDropped,
+                                  LinkError, LinkOutage, LinkTimeout)
+
+# Framing overhead per wire attempt: crc32 (4B) + payload length (4B).
+HEADER_BYTES = 8
+
+
+class ChecksumError(LinkError):
+    """Payload delivered but its crc32 did not match the header's."""
+
+
+class TransferFailed(RuntimeError):
+    """Retries exhausted for one logical transfer (stats attached)."""
+
+    def __init__(self, msg: str, *, attempts: int, elapsed_s: float,
+                 wire_bytes: int):
+        super().__init__(msg)
+        self.attempts = attempts
+        self.elapsed_s = elapsed_s
+        self.wire_bytes = wire_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Per-transfer reliability knobs (env: REPRO_LINK_RETRIES /
+    REPRO_LINK_TIMEOUT / REPRO_LINK_BACKOFF via ``RetryPolicy.from_env``).
+
+    Attempt i (1-based) waits ``backoff_base_s * backoff_factor**(i-1)``
+    -- scaled by ``1 + jitter * U[0,1)`` from the caller's seeded rng --
+    before attempt i+1."""
+
+    max_attempts: int = 4
+    timeout_s: float = 5.0
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    jitter: float = 0.25
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.timeout_s <= 0:
+            raise ValueError(
+                f"timeout_s must be positive, got {self.timeout_s}")
+        if self.backoff_base_s < 0 or self.backoff_factor < 1 \
+                or self.jitter < 0:
+            raise ValueError("backoff must be non-negative and "
+                             "non-shrinking")
+
+    def backoff_s(self, attempt: int, u: float = 0.0) -> float:
+        """Wait after failed attempt ``attempt`` (1-based); ``u`` in
+        [0, 1) supplies the jitter draw."""
+        base = self.backoff_base_s * self.backoff_factor ** (attempt - 1)
+        return base * (1.0 + self.jitter * u)
+
+    @classmethod
+    def from_env(cls) -> "RetryPolicy":
+        get = os.environ.get
+        return cls(
+            max_attempts=int(get(ENV_PREFIX + "RETRIES", 4)),
+            timeout_s=float(get(ENV_PREFIX + "TIMEOUT", 5.0)),
+            backoff_base_s=float(get(ENV_PREFIX + "BACKOFF", 0.05)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferOutcome:
+    """A successful logical transfer and what it cost."""
+
+    payload: bytes               # verified, bit-identical to what was sent
+    attempts: int                # wire attempts used (1 = clean)
+    elapsed_s: float             # total virtual time incl. failures+backoff
+    success_elapsed_s: float     # the winning attempt's own wire time
+    wire_bytes: int              # all bytes put on the wire (retransmits)
+    goodput_bytes: int           # payload + one header (the useful bytes)
+
+    @property
+    def retransmitted_bytes(self) -> int:
+        return self.wire_bytes - self.goodput_bytes
+
+    @property
+    def observed_bandwidth(self) -> float:
+        """Goodput of the winning attempt -- the EWMA estimator's input."""
+        if self.success_elapsed_s <= 0:
+            return float("inf")
+        return self.goodput_bytes / self.success_elapsed_s
+
+
+_FAIL_KINDS = {LinkDropped: ev.DROP, LinkTimeout: ev.TIMEOUT,
+               LinkOutage: ev.OUTAGE, ChecksumError: ev.CHECKSUM_FAIL}
+
+
+def send_with_retry(link: FaultyLink, payload: bytes,
+                    policy: RetryPolicy = RetryPolicy(), *,
+                    rng: np.random.Generator | None = None,
+                    log: EventLog | None = None,
+                    what: str = "boundary") -> TransferOutcome:
+    """Deliver ``payload`` over ``link`` or raise ``TransferFailed``.
+
+    rng: seeded generator for backoff jitter (None = no jitter).
+    log: optional ``EventLog``; every attempt/failure/backoff is emitted.
+    what: label carried on the events (e.g. "boundary", "logits")."""
+    log = log if log is not None else EventLog()
+    crc = zlib.crc32(payload)
+    size = len(payload) + HEADER_BYTES
+    t_start = link.clock
+    wire_bytes = 0
+    for attempt in range(1, policy.max_attempts + 1):
+        log.emit(ev.ATTEMPT, link.clock, what=what, attempt=attempt,
+                 nbytes=size)
+        wire_bytes += size
+        try:
+            delivered, elapsed = link.send(payload, policy.timeout_s)
+            if zlib.crc32(delivered) != crc:
+                raise ChecksumError(
+                    f"crc32 mismatch on attempt {attempt}", elapsed)
+            log.emit(ev.TRANSFER_OK, link.clock, what=what,
+                     attempt=attempt, elapsed_s=elapsed)
+            return TransferOutcome(
+                payload=delivered, attempts=attempt,
+                elapsed_s=link.clock - t_start, success_elapsed_s=elapsed,
+                wire_bytes=wire_bytes, goodput_bytes=size)
+        except LinkError as e:
+            log.emit(_FAIL_KINDS[type(e)], link.clock, what=what,
+                     attempt=attempt, elapsed_s=e.elapsed_s)
+            if attempt == policy.max_attempts:
+                log.emit(ev.GIVE_UP, link.clock, what=what,
+                         attempts=attempt)
+                raise TransferFailed(
+                    f"{what}: {attempt} attempts exhausted ({e})",
+                    attempts=attempt, elapsed_s=link.clock - t_start,
+                    wire_bytes=wire_bytes) from e
+            u = float(rng.uniform()) if rng is not None else 0.0
+            wait = policy.backoff_s(attempt, u)
+            link.advance(wait)
+            log.emit(ev.BACKOFF, link.clock, what=what, attempt=attempt,
+                     wait_s=wait)
+    raise AssertionError("unreachable")  # pragma: no cover

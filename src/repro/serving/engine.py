@@ -43,7 +43,9 @@ class BucketScheduler:
         self.pending: dict[int, list[Request]] = defaultdict(list)
 
     def add(self, req: Request) -> None:
-        req.enqueue_t = time.time()
+        # perf_counter, not time.time(): queue/latency deltas must be
+        # monotonic (wall clock can step backwards under NTP adjustment)
+        req.enqueue_t = time.perf_counter()
         self.pending[len(req.prompt)].append(req)
 
     def next_batch(self) -> list[Request] | None:
@@ -72,7 +74,10 @@ class Engine:
         self.scheduler = BucketScheduler(max_batch)
         self._rid = 0
         self.stats: dict[str, float] = {"batches": 0, "tokens": 0,
-                                        "prefill_tokens": 0}
+                                        "prefill_tokens": 0,
+                                        "latency_p50_s": 0.0,
+                                        "latency_p99_s": 0.0}
+        self._latencies: list[float] = []
 
         def prefill(params, tokens, cache):
             logits, cache, _ = T.forward(cfg, params, {"tokens": tokens},
@@ -123,6 +128,10 @@ class Engine:
         cur = self._sample(np.asarray(logits), reqs, key)
         for i, r in enumerate(reqs):
             r.output.append(int(cur[i]))
+            # the prefill-sampled token is output too -- without this the
+            # reported tok/s drifts from sum(len(r.output)) by one per
+            # request per batch
+            self.stats["tokens"] += 1
         for step in range(1, max_new):
             active = np.array([len(r.output) < r.max_new_tokens
                                for r in reqs])
@@ -135,11 +144,16 @@ class Engine:
                 if active[i]:
                     r.output.append(int(cur[i]))
                     self.stats["tokens"] += 1
-        now = time.time()
+        now = time.perf_counter()
         for r in reqs:
             r.done = True
             r.finish_t = now
+            self._latencies.append(now - r.enqueue_t)
         self.stats["batches"] += 1
+        self.stats["latency_p50_s"] = float(
+            np.percentile(self._latencies, 50))
+        self.stats["latency_p99_s"] = float(
+            np.percentile(self._latencies, 99))
 
     def run_until_idle(self) -> None:
         while (batch := self.scheduler.next_batch()) is not None:

@@ -1,0 +1,71 @@
+"""Serving-engine accounting: token counts and monotonic latency stats.
+
+Pins the two satellite fixes: (1) ``stats["tokens"]`` counts the
+prefill-sampled first token (previously it drifted from
+``sum(len(r.output))`` by one per request), and (2) request timing uses
+``time.perf_counter()`` (monotonic) with p50/p99 surfaced in
+``Engine.stats``."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_configs
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(all_configs()["qwen3-4b"].reduced(),
+                              vocab_size=128, name="stats-test")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def test_tokens_stat_matches_outputs_exactly(served):
+    """tokens == sum(len(r.output)) -- the prefill-sampled first token is
+    output and must be counted."""
+    cfg, params = served
+    eng = Engine(cfg, params, max_len=64, max_batch=4)
+    reqs = [eng.submit(list(range(1, 1 + n)), max_new_tokens=m)
+            for n, m in ((5, 3), (5, 1), (9, 4), (9, 2), (5, 3))]
+    eng.run_until_idle()
+    assert all(r.done for r in reqs)
+    produced = sum(len(r.output) for r in reqs)
+    assert eng.stats["tokens"] == produced
+    # max_new_tokens=1 is the pure-prefill edge: exactly one token, and
+    # it is counted
+    assert len(reqs[1].output) == 1
+
+
+def test_request_timing_is_perf_counter_based(served):
+    """enqueue/finish stamps come from the perf_counter timeline (not the
+    epoch): both sit inside a perf_counter bracket around the run, and
+    per-request latency is non-negative."""
+    cfg, params = served
+    eng = Engine(cfg, params, max_len=48, max_batch=2)
+    t_before = time.perf_counter()
+    req = eng.submit(list(range(1, 7)), max_new_tokens=2)
+    eng.run_until_idle()
+    t_after = time.perf_counter()
+    assert t_before <= req.enqueue_t <= req.finish_t <= t_after
+    # epoch seconds (time.time()) are ~1.7e9; perf_counter is not
+    assert req.enqueue_t < 1e9
+
+
+def test_latency_percentiles_surfaced(served):
+    cfg, params = served
+    eng = Engine(cfg, params, max_len=64, max_batch=2)
+    reqs = [eng.submit(list(range(1, 6)), max_new_tokens=2)
+            for _ in range(5)]
+    eng.run_until_idle()
+    assert all(r.done for r in reqs)
+    p50 = eng.stats["latency_p50_s"]
+    p99 = eng.stats["latency_p99_s"]
+    assert 0.0 < p50 <= p99
+    # every individual latency is bounded by the stats' sample
+    lats = [r.finish_t - r.enqueue_t for r in reqs]
+    assert p99 <= max(lats) + 1e-9

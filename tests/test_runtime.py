@@ -1,0 +1,468 @@
+"""Fault-tolerant split runtime: deterministic recovery-path tests.
+
+Every scenario here is seed/window-deterministic (outage windows and
+virtual-clock arithmetic force exact failure counts), so each recovery
+path -- retry success, device fallback, Pareto-front re-pick, proactive
+re-split, unrecoverable -- is pinned down without flakiness.  The
+randomised "never a silent wrong answer" sweep lives in
+tests/test_runtime_properties.py (hypothesis, dev-only dep)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_ENV_J6, NetworkState, link_weights,
+                        repick_split, smartsplit_exhaustive, topsis_rank)
+from repro.models import cnn as cnn_lib
+from repro.models.cnn import avgpool, conv, linear, maxpool, relu
+from repro.models.profiles import cnn_profile
+from repro.runtime import (EventLog, EwmaLinkEstimator, FaultSpec,
+                           FaultyLink, RetryPolicy, SplitRuntime,
+                           SplitUnrecoverable, TransferFailed, events,
+                           link_from_env, parse_outages, send_with_retry)
+
+# ---------------------------------------------------------------------------
+# Shared tiny model: 7 layers, plans in microseconds, runs in milliseconds.
+# ---------------------------------------------------------------------------
+TINY_LAYERS = [conv(8, 3, 1, 1), relu(), maxpool(2, 2),
+               conv(16, 3, 1, 1), relu(), avgpool(2), linear(10)]
+TINY_SHAPE = (3, 16, 16)
+L = len(TINY_LAYERS)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), TINY_LAYERS,
+                              TINY_SHAPE)
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.normal(size=(1,) + TINY_SHAPE), np.float32)
+    return params, x
+
+
+def _plan(dtype=None, hw=PAPER_ENV_J6):
+    prof = cnn_profile("tiny", in_shape=TINY_SHAPE, dtype=dtype,
+                       layers=TINY_LAYERS)
+    return prof, smartsplit_exhaustive(prof, hw)
+
+
+def _ref(params, x, split, dtype=None):
+    logits, _ = cnn_lib.apply_split(TINY_LAYERS, params, x, split,
+                                    dtype=dtype)
+    return np.asarray(logits)
+
+
+# ---------------------------------------------------------------------------
+# FaultyLink channel model
+# ---------------------------------------------------------------------------
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(drop_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(corrupt_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(delay_s=-1.0)
+    with pytest.raises(ValueError):
+        FaultSpec(outages=((2.0, 1.0),))
+    assert FaultSpec().fault_free
+    assert not FaultSpec(drop_rate=0.1).fault_free
+
+
+def test_faulty_link_clean_transfer_and_clock():
+    link = FaultyLink(100.0, latency_s=0.5)
+    out, elapsed = link.send(b"x" * 200, timeout_s=10.0)
+    assert out == b"x" * 200
+    assert elapsed == pytest.approx(0.5 + 200 / 100.0)
+    assert link.clock == pytest.approx(elapsed)
+    assert link.counters()["delivered"] == 1
+    link.advance(1.0)
+    assert link.clock == pytest.approx(elapsed + 1.0)
+    with pytest.raises(ValueError):
+        link.advance(-1.0)
+
+
+def test_faulty_link_deterministic_from_seed():
+    spec = FaultSpec(drop_rate=0.4, corrupt_rate=0.3)
+
+    def trace(seed):
+        link = FaultyLink(1e6, faults=spec, seed=seed)
+        out = []
+        for n in (100, 5000, 1, 333):
+            try:
+                data, _ = link.send(b"a" * n, timeout_s=1.0)
+                out.append("corrupt" if data != b"a" * n else "ok")
+            except Exception as e:
+                out.append(type(e).__name__)
+        return out, link.counters()
+
+    assert trace(7) == trace(7)
+    t3, _ = trace(3)
+    t4, _ = trace(4)
+    assert t3 != t4 or True  # seeds may collide; determinism is the claim
+
+
+def test_fault_schedule_is_size_invariant():
+    """Same seed, different payload sizes => same drop/corrupt pattern."""
+    spec = FaultSpec(drop_rate=0.5)
+
+    def outcomes(sizes):
+        link = FaultyLink(1e9, faults=spec, seed=11)
+        res = []
+        for n in sizes:
+            try:
+                link.send(b"z" * n, timeout_s=1.0)
+                res.append("ok")
+            except Exception:
+                res.append("drop")
+        return res
+
+    assert outcomes([10] * 8) == outcomes([10_000, 1, 77, 2, 9, 5, 3, 8])
+
+
+def test_outage_overlap_kills_inflight_transfer():
+    # 1000 B at 100 B/s = 10 s wire time; window (5, 6) sits mid-flight.
+    link = FaultyLink(100.0, faults=FaultSpec(outages=((5.0, 6.0),)))
+    with pytest.raises(Exception) as ei:
+        link.send(b"x" * 1000, timeout_s=20.0)
+    assert "outage" in str(ei.value).lower()
+    assert link.clock == pytest.approx(20.0)  # failed attempt burns timeout
+    # after the window the same payload sails through
+    out, _ = link.send(b"x" * 1000, timeout_s=20.0)
+    assert out == b"x" * 1000
+    assert link.outage_hits == 1
+
+
+def test_timeout_when_transfer_too_slow():
+    link = FaultyLink(10.0)
+    with pytest.raises(Exception) as ei:
+        link.send(b"x" * 1000, timeout_s=1.0)  # needs 100 s
+    assert "timeout" in str(ei.value).lower()
+    assert link.timeouts == 1 and link.bytes_lost == 1000
+
+
+def test_bandwidth_profile_piecewise():
+    link = FaultyLink(100.0, bandwidth_profile=((1.0, 10.0), (2.0, 50.0)))
+    assert link.bandwidth_at(0.0) == 100.0
+    assert link.bandwidth_at(1.5) == 10.0
+    assert link.bandwidth_at(99.0) == 50.0
+
+
+def test_parse_outages_and_env(monkeypatch):
+    assert parse_outages("0:1, 2.5:3") == ((0.0, 1.0), (2.5, 3.0))
+    assert parse_outages("") == ()
+    monkeypatch.setenv("REPRO_LINK_DROP", "0.25")
+    monkeypatch.setenv("REPRO_LINK_OUTAGES", "1:2")
+    monkeypatch.setenv("REPRO_LINK_SEED", "9")
+    monkeypatch.setenv("REPRO_LINK_BW", "12345")
+    link = link_from_env(999.0)
+    assert link.bandwidth == 12345.0
+    assert link.faults.drop_rate == 0.25
+    assert link.faults.outages == ((1.0, 2.0),)
+    assert link.seed == 9
+    # explicit args beat env
+    link = link_from_env(999.0, seed=1, faults=FaultSpec())
+    assert link.seed == 1 and link.faults.fault_free
+
+
+# ---------------------------------------------------------------------------
+# Transfer layer
+# ---------------------------------------------------------------------------
+def test_send_with_retry_clean_is_one_attempt():
+    link = FaultyLink(1e6)
+    log = EventLog()
+    out = send_with_retry(link, b"payload", RetryPolicy(), log=log)
+    assert out.payload == b"payload"
+    assert out.attempts == 1 and out.retransmitted_bytes == 0
+    assert log.count(events.TRANSFER_OK) == 1
+
+
+def test_send_with_retry_detects_corruption_and_recovers():
+    # corrupt every delivery on attempt 1..n? corrupt_rate=1 corrupts all,
+    # so retries exhaust on checksum; corrupt_rate picked per-send uniform
+    # means rate 1.0 always corrupts -- verify the crc catches it.
+    link = FaultyLink(1e6, faults=FaultSpec(corrupt_rate=1.0), seed=0)
+    log = EventLog()
+    with pytest.raises(TransferFailed):
+        send_with_retry(link, b"payload", RetryPolicy(max_attempts=3),
+                        log=log)
+    assert log.count(events.CHECKSUM_FAIL) == 3
+    assert log.count(events.GIVE_UP) == 1
+    assert link.corrupted == 3  # delivered-but-flipped, caught by crc32
+
+
+def test_send_with_retry_outage_then_success():
+    # window (0, 0.5): attempt 1 dies, backoff pushes attempt 2 past it.
+    link = FaultyLink(1e6, faults=FaultSpec(outages=((0.0, 0.5),)))
+    log = EventLog()
+    out = send_with_retry(
+        link, b"x" * 100,
+        RetryPolicy(max_attempts=3, timeout_s=0.6, backoff_base_s=0.01),
+        log=log)
+    assert out.attempts == 2
+    assert out.retransmitted_bytes == 108  # one lost attempt (+8B header)
+    assert [e.kind for e in log.events] == [
+        events.ATTEMPT, events.OUTAGE, events.BACKOFF,
+        events.ATTEMPT, events.TRANSFER_OK]
+
+
+def test_retry_policy_backoff_and_validation():
+    p = RetryPolicy(backoff_base_s=0.1, backoff_factor=2.0, jitter=0.5)
+    assert p.backoff_s(1) == pytest.approx(0.1)
+    assert p.backoff_s(3) == pytest.approx(0.4)
+    assert p.backoff_s(1, u=1.0) == pytest.approx(0.15)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(timeout_s=0.0)
+
+
+def test_retry_policy_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_LINK_RETRIES", "7")
+    monkeypatch.setenv("REPRO_LINK_TIMEOUT", "2.5")
+    p = RetryPolicy.from_env()
+    assert p.max_attempts == 7 and p.timeout_s == 2.5
+
+
+# ---------------------------------------------------------------------------
+# Estimator + NetworkState + re-pick API
+# ---------------------------------------------------------------------------
+def test_ewma_estimator_decays_toward_observations():
+    est = EwmaLinkEstimator(1000.0, alpha=0.5)
+    assert est.degradation() == pytest.approx(1.0)
+    est.observe(100.0, 1.0)     # observed 100 B/s
+    assert est.bandwidth == pytest.approx(550.0)
+    est.observe(0.0, 2.0)       # failed transfer: floor-clamped zero
+    assert est.bandwidth == pytest.approx(275.5)
+    assert est.degradation() > 3.0
+    assert est.observe(0.0, 0.0) == est.bandwidth  # zero-time no-op
+
+
+def test_network_state_tracks_estimate():
+    ns = NetworkState(PAPER_ENV_J6.link)
+    assert ns.degradation == pytest.approx(1.0)
+    ns.update(PAPER_ENV_J6.link.bandwidth / 4)
+    assert ns.degradation == pytest.approx(4.0)
+    assert ns.effective_link().bandwidth == \
+        pytest.approx(PAPER_ENV_J6.link.bandwidth / 4)
+
+
+def test_link_weights_shift_toward_latency():
+    w = link_weights(1.0)
+    assert np.allclose(w, [1.0, 1.0, 1.0])
+    w4 = link_weights(4.0)
+    assert np.allclose(w4, [4.0, 2.0, 1.0])
+    with pytest.raises(ValueError):
+        link_weights(0.0)
+
+
+def test_topsis_rank_orders_all_feasible_rows():
+    F = np.array([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0]])
+    rank = topsis_rank(F)
+    assert sorted(rank.tolist()) == [0, 1, 2]
+    # rank[0] dominates row 1 outright, so 1 cannot be first
+    assert rank[0] != 1
+    masked = topsis_rank(F, feasible=np.array([False, True, True]))
+    assert 0 not in masked.tolist() and len(masked) == 2
+
+
+def test_repick_split_walks_front_without_ga(tiny):
+    prof, plan = _plan()
+    alt = repick_split(plan, prof, PAPER_ENV_J6,
+                       exclude=(plan.split_index,))
+    assert alt.split_index != plan.split_index
+    assert alt.split_index in plan.pareto_indices
+    # degraded link steers toward smaller boundary payloads
+    slow = repick_split(plan, prof, PAPER_ENV_J6,
+                        bandwidth=PAPER_ENV_J6.link.bandwidth / 100)
+    assert slow.split_index in plan.pareto_indices
+    # excluding the whole front leaves nothing to pick
+    with pytest.raises(ValueError):
+        repick_split(plan, prof, PAPER_ENV_J6,
+                     exclude=tuple(plan.pareto_indices))
+
+
+# ---------------------------------------------------------------------------
+# apply_cnn / apply_split bounds (satellite: named validation)
+# ---------------------------------------------------------------------------
+def test_apply_split_bounds_validated(tiny):
+    params, x = tiny
+    for bad in (-1, L + 1):
+        with pytest.raises(ValueError, match="split_index"):
+            cnn_lib.apply_split(TINY_LAYERS, params, x, bad)
+    with pytest.raises(ValueError, match="start"):
+        cnn_lib.apply_cnn(TINY_LAYERS, params, x, start=-1)
+    with pytest.raises(ValueError, match="stop"):
+        cnn_lib.apply_cnn(TINY_LAYERS, params, x, start=3, stop=2)
+
+
+def test_apply_split_degenerate_placements(tiny):
+    """l1=0 (all-on-server, the paper's COC baseline) and l1=L (all on
+    device) are legal splits, and both match the unsplit forward pass."""
+    params, x = tiny
+    full = np.asarray(cnn_lib.apply_cnn(TINY_LAYERS, params, x))
+    coc, boundary0 = cnn_lib.apply_split(TINY_LAYERS, params, x, 0)
+    assert np.array_equal(np.asarray(coc), full)
+    assert boundary0.shape == (1,) + TINY_SHAPE  # raw input crosses
+    dev, boundary_l = cnn_lib.apply_split(TINY_LAYERS, params, x, L)
+    assert np.array_equal(np.asarray(dev), full)
+    assert np.array_equal(np.asarray(boundary_l), full)  # logits "cross"
+
+
+# ---------------------------------------------------------------------------
+# SplitRuntime recovery paths (all deterministic via outage windows)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", ["fp32", "bf16"])
+def test_zero_fault_runtime_bit_identical(tiny, dtype):
+    """Acceptance: a zero-fault FaultyLink through the full runtime path
+    (serialize -> checksumed transfer -> deserialize) reproduces the
+    fault-free apply_split logits bit-identically."""
+    params, x = tiny
+    prof, plan = _plan(dtype=dtype)
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      dtype=dtype)
+    r = rt.infer(x)
+    assert not r.degraded and not r.on_device
+    assert r.attempts == 1 and r.retransmitted_bytes == 0
+    assert np.array_equal(np.asarray(r.logits),
+                          _ref(params, x, plan.split_index, dtype))
+    assert rt.stats()["recovered"] == 0
+
+
+def test_runtime_retry_recovers_and_records(tiny):
+    """One outage-killed attempt, then success: same logits, recovery in
+    the event log, retransmitted bytes accounted."""
+    params, x = tiny
+    prof, plan = _plan()
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth,
+                      faults=FaultSpec(outages=((0.0, 0.001),)))
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link,
+                      policy=RetryPolicy(max_attempts=3, timeout_s=0.01,
+                                         backoff_base_s=0.02))
+    r = rt.infer(x)
+    assert r.attempts == 2 and not r.degraded
+    assert r.retransmitted_bytes > 0
+    assert np.array_equal(np.asarray(r.logits),
+                          _ref(params, x, plan.split_index))
+    kinds = [e.kind for e in r.events]
+    assert events.OUTAGE in kinds and events.TRANSFER_OK in kinds
+    assert rt.stats()["recovered"] == 1
+
+
+def test_runtime_device_fallback_bit_identical(tiny):
+    """Retries exhausted + roomy client => finish on-device from the
+    boundary activation; logits stay bit-identical (same chunked
+    computation, no transfer)."""
+    params, x = tiny
+    prof, plan = _plan()
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth,
+                      faults=FaultSpec(drop_rate=1.0), seed=0)
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link,
+                      policy=RetryPolicy(max_attempts=2, timeout_s=0.01,
+                                         backoff_base_s=0.001))
+    r = rt.infer(x)
+    assert r.degraded and r.on_device
+    assert r.split_index == plan.split_index
+    assert np.array_equal(np.asarray(r.logits),
+                          _ref(params, x, plan.split_index))
+    kinds = [e.kind for e in r.events]
+    assert events.GIVE_UP in kinds and events.FALLBACK_DEVICE in kinds
+    assert rt.stats()["fallback_device"] == 1
+
+
+def test_runtime_repick_when_device_infeasible(tiny):
+    """Tight client memory forbids the device fallback, so exhaustion
+    walks the cached Pareto front: a different split completes the request
+    and its logits match that split's fault-free run."""
+    params, x = tiny
+    prof, _ = _plan()
+    full_mem = float(prof.cum_mem()[-1])
+    hw = dataclasses.replace(
+        PAPER_ENV_J6, client=dataclasses.replace(
+            PAPER_ENV_J6.client, memory_budget=0.9 * full_mem))
+    plan = smartsplit_exhaustive(prof, hw)
+    link = FaultyLink(hw.link.bandwidth,
+                      faults=FaultSpec(outages=((0.0, 0.8),)))
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, hw, link=link,
+                      policy=RetryPolicy(max_attempts=2, timeout_s=0.5,
+                                         backoff_base_s=0.05))
+    r = rt.infer(x)
+    assert r.degraded and not r.on_device
+    assert r.split_index != plan.split_index
+    assert r.split_index in plan.pareto_indices
+    assert np.array_equal(np.asarray(r.logits),
+                          _ref(params, x, r.split_index))
+    kinds = [e.kind for e in r.events]
+    assert events.REPICK in kinds and events.TRANSFER_OK in kinds
+    assert rt.stats()["repicks"] == 1
+
+
+def test_runtime_unrecoverable_raises_with_evidence(tiny):
+    """All drops + no device fallback + front exhausted => a loud
+    SplitUnrecoverable with the tried splits, never a wrong answer."""
+    params, x = tiny
+    prof, plan = _plan()
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth,
+                      faults=FaultSpec(drop_rate=1.0), seed=0)
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link, device_fallback=False,
+                      policy=RetryPolicy(max_attempts=2, timeout_s=0.01,
+                                         backoff_base_s=0.001))
+    with pytest.raises(SplitUnrecoverable):
+        rt.infer(x)
+    assert rt.log.count(events.UNRECOVERABLE) == 1
+    assert rt.log.count(events.REPICK) >= 1  # it did try the front
+
+
+def test_runtime_proactive_resplit_on_sustained_degradation(tiny):
+    """A 500x bandwidth collapse (piecewise profile, no random faults)
+    drags the EWMA estimate down until degradation() crosses the trigger
+    and the runtime re-picks BEFORE burning retries."""
+    params, x = tiny
+    prof, plan = _plan()
+    bw = PAPER_ENV_J6.link.bandwidth
+    link = FaultyLink(bw, bandwidth_profile=((0.003, bw / 500),))
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link, resplit_ratio=2.0,
+                      policy=RetryPolicy(max_attempts=3, timeout_s=60.0))
+    results = [rt.infer(x) for _ in range(8)]
+    assert rt.n_proactive >= 1
+    assert rt.log.count(events.PROACTIVE_RESPLIT) == rt.n_proactive
+    # every request still completed with that split's exact logits
+    for r in results:
+        assert np.array_equal(np.asarray(r.logits),
+                              _ref(params, x, r.split_index))
+    # the re-pick actually moved the active split
+    assert rt.stats()["active_split"] != plan.split_index
+
+
+def test_runtime_rejects_mismatched_profile(tiny):
+    params, _ = tiny
+    prof, plan = _plan()
+    with pytest.raises(ValueError, match="layers"):
+        SplitRuntime(TINY_LAYERS[:-1], params, plan, prof, PAPER_ENV_J6)
+
+
+def test_runtime_acceptance_profile_completes_all(tiny):
+    """The chaos harness's acceptance profile (30% drops + one outage
+    window) at tiny scale: every request completes, recoveries recorded."""
+    params, x = tiny
+    prof, plan = _plan()
+    spec = FaultSpec(drop_rate=0.3, outages=((0.0, 1.0),))
+    for seed in (0, 1, 2):
+        link = FaultyLink(PAPER_ENV_J6.link.bandwidth, faults=spec,
+                          seed=seed)
+        rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                          link=link, jitter_seed=seed,
+                          policy=RetryPolicy(max_attempts=5, timeout_s=2.0,
+                                             backoff_base_s=0.05))
+        for _ in range(6):
+            r = rt.infer(x)
+            assert np.array_equal(np.asarray(r.logits),
+                                  _ref(params, x, r.split_index))
+        s = rt.stats()
+        assert s["requests"] == 6
+        # the outage window guarantees at least the first transfer failed
+        assert s["link"]["outage_hits"] >= 1
+        assert s["recovered"] >= 1

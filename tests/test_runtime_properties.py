@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the fault-tolerant split runtime.
+
+The headline invariant: for ANY injected sequence of drops, corruptions,
+delays, and outages, a completed request's logits are bit-identical to
+the fault-free ``apply_split`` run at the split that actually executed,
+and any deviation from the planned split carries recorded recovery
+events -- never a silent wrong answer.
+
+Kept separate from tests/test_runtime.py so environments without
+``hypothesis`` (dev-only dependency) still run the deterministic suite."""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import PAPER_ENV_J6, smartsplit_exhaustive  # noqa: E402
+from repro.models import cnn as cnn_lib  # noqa: E402
+from repro.models.cnn import (avgpool, conv, linear,  # noqa: E402
+                              maxpool, relu)
+from repro.models.profiles import cnn_profile  # noqa: E402
+from repro.runtime import (FaultSpec, FaultyLink,  # noqa: E402
+                           RetryPolicy, SplitRuntime, events)
+
+LAYERS = [conv(8, 3, 1, 1), relu(), maxpool(2, 2),
+          conv(16, 3, 1, 1), relu(), avgpool(2), linear(10)]
+IN_SHAPE = (3, 16, 16)
+L = len(LAYERS)
+
+PARAMS = cnn_lib.init_cnn(jax.random.PRNGKey(0), LAYERS, IN_SHAPE)
+X = np.asarray(np.random.default_rng(0).normal(size=(1,) + IN_SHAPE),
+               np.float32)
+PROF = cnn_profile("tiny", in_shape=IN_SHAPE, layers=LAYERS)
+PLAN = smartsplit_exhaustive(PROF, PAPER_ENV_J6)
+# Fault-free reference logits for every possible split placement.
+REFS = {l1: np.asarray(cnn_lib.apply_split(LAYERS, PARAMS, X, l1)[0])
+        for l1 in range(L + 1)}
+
+RECOVERY_KINDS = {events.FALLBACK_DEVICE, events.REPICK,
+                  events.PROACTIVE_RESPLIT, events.GIVE_UP}
+
+
+@given(drop=st.floats(0.0, 1.0), corrupt=st.floats(0.0, 1.0),
+       delay=st.floats(0.0, 1.0),
+       outage_at=st.none() | st.floats(0.0, 0.05),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_never_a_silent_wrong_answer(drop, corrupt, delay, outage_at,
+                                     seed):
+    """Any fault mix: each request's logits are bit-identical to the
+    fault-free run of its executed split, and a non-planned outcome is
+    always explained by recovery events."""
+    outages = () if outage_at is None else ((outage_at, outage_at + 0.2),)
+    spec = FaultSpec(drop_rate=drop, corrupt_rate=corrupt,
+                     delay_rate=delay, delay_s=0.05, outages=outages)
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth, faults=spec, seed=seed)
+    rt = SplitRuntime(LAYERS, PARAMS, PLAN, PROF, PAPER_ENV_J6, link=link,
+                      jitter_seed=seed,
+                      policy=RetryPolicy(max_attempts=3, timeout_s=0.1,
+                                         backoff_base_s=0.02))
+    for _ in range(3):
+        r = rt.infer(X)  # PAPER_ENV_J6's client fits the model: no raise
+        assert np.array_equal(np.asarray(r.logits), REFS[r.split_index])
+        if r.degraded:
+            kinds = {e.kind for e in r.events}
+            assert kinds & RECOVERY_KINDS, (
+                f"degraded result with no recovery event: {kinds}")
+        else:
+            # non-degraded => the planned split's exact logits
+            assert r.split_index == r.planned_split
+            assert np.array_equal(np.asarray(r.logits),
+                                  REFS[r.planned_split])
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       sizes=st.lists(st.integers(1, 10_000), min_size=1, max_size=12))
+@settings(max_examples=40, deadline=None)
+def test_fault_schedule_reproducible_and_size_invariant(seed, sizes):
+    """Same seed => identical outcome sequence, regardless of payload
+    sizes (the schedule must not leak payload geometry)."""
+    spec = FaultSpec(drop_rate=0.5, corrupt_rate=0.3)
+
+    def outcomes(szs):
+        link = FaultyLink(1e9, faults=spec, seed=seed)
+        res = []
+        for n in szs:
+            try:
+                data, _ = link.send(b"q" * n, timeout_s=1.0)
+                res.append("corrupt" if data != b"q" * n else "ok")
+            except Exception as e:
+                res.append(type(e).__name__)
+        return res
+
+    assert outcomes(sizes) == outcomes(sizes)
+    assert outcomes(sizes) == outcomes([1] * len(sizes))
+
+
+@given(seed=st.integers(0, 2**31 - 1), drop=st.floats(0.0, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_runtime_is_deterministic_per_seed(seed, drop):
+    """Two runtimes with identical seeds replay the same recovery story:
+    same attempts, same split, same virtual-clock spend, same logits."""
+    def run():
+        link = FaultyLink(PAPER_ENV_J6.link.bandwidth,
+                          faults=FaultSpec(drop_rate=drop), seed=seed)
+        rt = SplitRuntime(LAYERS, PARAMS, PLAN, PROF, PAPER_ENV_J6,
+                          link=link, jitter_seed=seed,
+                          policy=RetryPolicy(max_attempts=4,
+                                             timeout_s=0.1,
+                                             backoff_base_s=0.02))
+        r = rt.infer(X)
+        return (r.attempts, r.split_index, r.on_device,
+                r.link_elapsed_s, np.asarray(r.logits))
+
+    a, b = run(), run()
+    assert a[:4] == b[:4]
+    assert np.array_equal(a[4], b[4])
