@@ -1,6 +1,9 @@
 """Beyond-paper: K-cut chain splits (edge accelerator -> edge pod ->
 regional -> core).  Reports the GA plan vs brute force (where tractable)
-and the GA's advantage as K grows."""
+and the GA's advantage as K grows; the smoke variant plans the paper's
+CNN chains (``smartsplit_chain``) and prices microbatch pipelining.
+
+Artifacts: ``benchmarks/out/BENCH_multicut{_smoke}.json``."""
 from __future__ import annotations
 
 import itertools
@@ -9,13 +12,14 @@ import time
 import numpy as np
 
 from benchmarks.common import save_json
+from repro.core import paper_chain, smartsplit_chain
 from repro.core.hardware import DCN_LINK, tpu_pod_tier
 from repro.core.multicut import (ChainHardware, evaluate_multicut,
                                  smartsplit_multicut)
 from repro.core.nsga2 import NSGA2Config
 from repro.core.pareto import exhaustive_pareto
 from repro.core.topsis import topsis_select
-from repro.models.profiles import transformer_profile
+from repro.models.profiles import cnn_profile, transformer_profile
 
 
 def _chain(K: int) -> ChainHardware:
@@ -24,7 +28,43 @@ def _chain(K: int) -> ChainHardware:
     return ChainHardware(tiers=tiers, links=tuple([DCN_LINK] * (K - 1)))
 
 
-def run_all() -> list[tuple]:
+def run_smoke() -> list[tuple]:
+    """CI-sized variant: exhaustive chain plans for the paper CNN on the
+    phone->edge->core environment, priced at M=1 vs M=4 microbatches."""
+    rows = []
+    art = {}
+    prof = cnn_profile("alexnet", batch=4, in_shape=(3, 96, 96))
+    for K in (2, 3):
+        hw = paper_chain(K)
+        t0 = time.time()
+        plan = smartsplit_chain(prof, hw)
+        wall_s = time.time() - t0
+        plan_m4 = smartsplit_chain(prof, hw, microbatches=4)
+        entry = {"cuts": list(plan.cuts), "tiers": list(plan.tiers),
+                 "latency_s": plan.objectives[0],
+                 "energy_j": plan.objectives[1],
+                 "device_mem_bytes": plan.objectives[2],
+                 "m4_cuts": list(plan_m4.cuts),
+                 "m4_latency_s": plan_m4.objectives[0],
+                 "pipeline_speedup": plan.objectives[0]
+                 / max(plan_m4.objectives[0], 1e-12),
+                 "wall_s": round(wall_s, 3)}
+        art[f"K={K}"] = entry
+        rows.append((f"multicut/smoke.alexnet.K{K}.cuts", None,
+                     "/".join(map(str, plan.cuts)) or "none"))
+        rows.append((f"multicut/smoke.alexnet.K{K}.latency_s",
+                     plan.objectives[0] * 1e6,
+                     f"m1={plan.objectives[0]:.5f}s"
+                     f" m4={plan_m4.objectives[0]:.5f}s"
+                     f" speedup={entry['pipeline_speedup']:.3f}x"))
+    path = save_json("", "BENCH_multicut_smoke.json", art)
+    rows.append(("multicut/smoke.artifact", None, str(path)))
+    return rows
+
+
+def run_all(smoke: bool = False) -> list[tuple]:
+    if smoke:
+        return run_smoke()
     rows = []
     art = {}
     from repro.configs import all_configs
@@ -59,5 +99,5 @@ def run_all() -> list[tuple]:
                      "/".join(map(str, plan.cuts))))
         rows.append((f"multicut.internvl2.K{K}.latency_s", ga_s * 1e6,
                      f"{plan.objectives[0]:.5f}"))
-    save_json("", "multicut.json", art)
+    save_json("", "BENCH_multicut.json", art)
     return rows

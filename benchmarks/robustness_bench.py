@@ -22,10 +22,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save_json, time_us
-from repro.core import PAPER_ENV_J6, smartsplit_exhaustive
+from repro.core import (PAPER_ENV_J6, paper_chain, smartsplit_chain,
+                        smartsplit_exhaustive)
 from repro.models import cnn as cnn_lib
 from repro.models.profiles import cnn_profile
-from repro.runtime import FaultSpec, FaultyLink, RetryPolicy, SplitRuntime
+from repro.runtime import (ChainRuntime, FaultSpec, FaultyLink, RetryPolicy,
+                           SplitRuntime, VirtualClock, microbatch_slices)
 
 MODELS = ("alexnet", "vgg16", "mobilenetv2")
 SMOKE_MODELS = ("alexnet", "mobilenetv2")
@@ -113,6 +115,128 @@ def run_cell(model: str, dtype: str, profile_name: str, spec: FaultSpec,
     }
 
 
+# --------------------------------------------------------------------------
+# N-tier chain cells (ChainRuntime): microbatch pipelining + mid-chain outage
+# --------------------------------------------------------------------------
+
+# Each config runs two chain profiles: ``chain_clean`` (M=1 vs M=pipeline_m
+# on zero-fault links -- the pipelining headline) and ``chain_midhop_outage``
+# (the middle hop is dead from t=0; every request must recover via a stage
+# merge or a Pareto re-pick).
+CHAIN_CONFIGS_SMOKE = (
+    dict(model="alexnet", num_tiers=3, in_shape=(3, 96, 96), batch=4,
+         requests=3, pipeline_m=4),
+)
+# Full mode adds the acceptance shape: a 4-tier VGG16 chain at the paper's
+# native 224px input.
+CHAIN_CONFIGS = CHAIN_CONFIGS_SMOKE + (
+    dict(model="vgg16", num_tiers=4, in_shape=cnn_lib.INPUT_SHAPE, batch=4,
+         requests=2, pipeline_m=4),
+)
+
+
+def _chain_links(hw, seed: int, outage_hop: int | None = None
+                 ) -> list[FaultyLink]:
+    """Per-hop links on one shared virtual clock; ``outage_hop`` (if any)
+    is dead from t=0 onward."""
+    clock = VirtualClock()
+    links = []
+    for k, link in enumerate(hw.links):
+        spec = FaultSpec(outages=((0.0, 1e9),)) if k == outage_hop \
+            else FaultSpec()
+        links.append(FaultyLink(link.bandwidth, faults=spec,
+                                seed=seed + k, clock=clock))
+    return links
+
+
+def run_chain_cell(cfg: dict, dtype: str, profile_name: str,
+                   seeds: tuple[int, ...],
+                   policy: RetryPolicy = POLICY) -> dict:
+    """One (chain-config, dtype, fault-profile) cell across link seeds."""
+    model, num_tiers = cfg["model"], cfg["num_tiers"]
+    in_shape, batch = cfg["in_shape"], cfg["batch"]
+    requests, pipeline_m = cfg["requests"], cfg["pipeline_m"]
+    hw = paper_chain(num_tiers)
+    prof = cnn_profile(model, batch=batch, in_shape=in_shape, dtype=dtype)
+    plan = smartsplit_chain(prof, hw)
+    layers = cnn_lib.CNN_MODELS[model]
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), layers, in_shape)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch,) + in_shape), jnp.float32)
+
+    # Single-device reference at each microbatch granularity: XLA convs
+    # are not bitwise batch-size-invariant, so the M-microbatch chain is
+    # compared against the whole net run on one box over the SAME slices
+    # (M=1 degenerates to the plain batched reference).
+    def _ref(m: int) -> np.ndarray:
+        outs = [cnn_lib.apply_cnn(layers, params, x[a:b], dtype=dtype)
+                for a, b in microbatch_slices(batch, m)]
+        return np.asarray(jnp.concatenate(outs, axis=0))
+
+    outage_hop = (num_tiers - 1) // 2 if profile_name == "chain_midhop_outage" \
+        else None
+    completed = 0
+    total = 0
+    bit_identical = True
+    elapsed: dict[int, list[float]] = {}
+    agg = {"recovered": 0, "merges": 0, "repicks": 0, "attempts": 0,
+           "retransmitted_bytes": 0, "wire_bytes": 0}
+    # clean cells sweep M in {1, pipeline_m} to measure the pipelining win;
+    # outage cells only need the pipelined path under fire
+    m_values = (1, pipeline_m) if outage_hop is None else (pipeline_m,)
+    for m in m_values:
+        elapsed[m] = []
+        ref_np = _ref(m)
+        for seed in seeds:
+            rt = ChainRuntime(model, params, plan, prof, hw,
+                              links=_chain_links(hw, seed, outage_hop),
+                              dtype=dtype, policy=policy, microbatches=m,
+                              jitter_seed=seed)
+            for _ in range(requests):
+                total += 1
+                r = rt.infer(x)
+                jax.block_until_ready(r.logits)
+                completed += 1
+                elapsed[m].append(r.chain_elapsed_s)
+                agg["attempts"] += r.attempts
+                agg["retransmitted_bytes"] += r.retransmitted_bytes
+                agg["wire_bytes"] += r.wire_bytes
+                bit_identical &= bool(
+                    np.array_equal(np.asarray(r.logits), ref_np))
+            s = rt.stats()
+            agg["recovered"] += s["recovered"]
+            agg["merges"] += s["merges"]
+            agg["repicks"] += s["repicks"]
+    lat = {m: float(np.mean(v)) for m, v in elapsed.items()}
+    cell = {
+        "model": model, "dtype": dtype, "profile": profile_name,
+        "num_tiers": num_tiers, "cuts": list(plan.cuts),
+        "tiers": list(plan.tiers), "batch": batch,
+        "pipeline_m": pipeline_m,
+        "requests": total, "completed": completed,
+        "success_rate": completed / total,
+        "bit_identical": bit_identical,
+        "chain_latency_s": {str(m): lat[m] for m in lat},
+        **agg,
+        "outage_hop": outage_hop,
+        "seeds": list(seeds),
+    }
+    if 1 in lat and pipeline_m in lat and lat[pipeline_m] > 0:
+        cell["pipeline_speedup"] = lat[1] / lat[pipeline_m]
+    return cell
+
+
+def chain_sweep(*, configs=CHAIN_CONFIGS, dtypes=DTYPES,
+                seeds=(0,), policy: RetryPolicy = POLICY) -> list[dict]:
+    cells = []
+    for cfg in configs:
+        for dtype in dtypes:
+            for pname in ("chain_clean", "chain_midhop_outage"):
+                cells.append(run_chain_cell(cfg, dtype, pname,
+                                            tuple(seeds), policy=policy))
+    return cells
+
+
 def chaos_sweep(*, models=MODELS, dtypes=DTYPES, profiles=None,
                 seeds=(0,), in_shape=cnn_lib.INPUT_SHAPE,
                 requests: int = 6,
@@ -149,14 +273,18 @@ def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
         sweep = dict(models=SMOKE_MODELS, in_shape=(3, 96, 96),
                      requests=4, seeds=tuple(seeds),
                      policy=POLICY_SMOKE)
+        chain = dict(configs=CHAIN_CONFIGS_SMOKE, seeds=tuple(seeds),
+                     policy=POLICY_SMOKE)
     else:
         seeds = seeds if seeds is not None else (0,)
         sweep = dict(models=MODELS, requests=6, seeds=tuple(seeds))
+        chain = dict(configs=CHAIN_CONFIGS, seeds=tuple(seeds))
 
     report = {}
 
     def build():
         report["out"] = chaos_sweep(**sweep)
+        report["out"]["chain_cells"] = chain_sweep(**chain)
 
     us = time_us(build, repeats=1, warmup=0)
     out = report["out"]
@@ -173,10 +301,25 @@ def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
             f" fallbacks={c['fallback_device']}"
             f" repicks={c['repicks']}"
             f" retx_bytes={c['retransmitted_bytes']}"))
-    n_ok = sum(c["success_rate"] == 1.0 for c in out["cells"])
-    rows.append((f"robustness/sweep[{len(out['cells'])}cells]",
+    for c in out["chain_cells"]:
+        m_hi = str(c["pipeline_m"])
+        lat_hi = c["chain_latency_s"][m_hi]
+        derived = (f"success={c['success_rate']:.2f}"
+                   f" lat_m{m_hi}={lat_hi:.4f}s"
+                   f" merges={c['merges']} repicks={c['repicks']}"
+                   f" bitid={c['bit_identical']}")
+        if "pipeline_speedup" in c:
+            derived += (f" lat_m1={c['chain_latency_s']['1']:.4f}s"
+                        f" speedup={c['pipeline_speedup']:.3f}x")
+        rows.append((
+            f"robustness/chain{c['num_tiers']}.{c['model']}.{c['dtype']}"
+            f".{c['profile']}",
+            round(lat_hi * 1e6, 1), derived))
+    all_cells = out["cells"] + out["chain_cells"]
+    n_ok = sum(c["success_rate"] == 1.0 for c in all_cells)
+    rows.append((f"robustness/sweep[{len(all_cells)}cells]",
                  round(us, 1),
-                 f"all_complete={n_ok}/{len(out['cells'])} -> {path}"))
+                 f"all_complete={n_ok}/{len(all_cells)} -> {path}"))
     return rows
 
 

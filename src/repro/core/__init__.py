@@ -1,36 +1,51 @@
 """SmartSplit core: cost models, NSGA-II, TOPSIS, the split planner and the
 paper's competing baselines."""
 from repro.core.baselines import ALGORITHMS, coc, cos, ebo, lbo, mbo, rs
-from repro.core.costs import (LayerProfile, ModelProfile, client_memory,
-                              energy_terms, evaluate_objectives,
-                              feasible_mask, latency_terms, total_energy,
-                              total_latency)
+from repro.core.chainplan import ChainPlan, MultiCutPlan, SplitPlan
+from repro.core.costs import (FRAME_HEADER_BYTES, LayerProfile, ModelProfile,
+                              chain_feasible_mask, chain_stage_hop_times,
+                              client_memory, energy_terms,
+                              evaluate_chain_objectives, evaluate_objectives,
+                              feasible_mask, latency_terms, pipeline_latency,
+                              total_energy, total_latency)
 from repro.core.dtype_policy import (CONV_DTYPES, conv_dtype, dtype_bytes,
                                      policy_jnp_dtype)
-from repro.core.hardware import (PAPER_ENV_J6, PAPER_ENV_NOTE8, PROFILES,
-                                 TPU_EDGE_CLOUD, TPU_TWO_POD, DeviceTier,
+from repro.core.hardware import (ETH_100MBPS, ETH_1GBPS, PAPER_CORE,
+                                 PAPER_EDGE, PAPER_ENV_J6, PAPER_ENV_NOTE8,
+                                 PAPER_REGIONAL, PROFILES, TPU_EDGE_CLOUD,
+                                 TPU_TWO_POD, ChainHardware, DeviceTier,
                                  LinkProfile, NetworkState, TwoTierHardware,
-                                 tpu_pod_tier)
+                                 chain_of, paper_chain, tpu_pod_tier)
+from repro.core.multicut import (evaluate_multicut, repick_chain,
+                                 smartsplit_chain, smartsplit_multicut)
 from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
 from repro.core.pareto import (crowding_distance, exhaustive_pareto,
                                non_dominated_sort, pareto_front_mask)
-from repro.core.smartsplit import (SplitPlan, repick_split, smartsplit,
+from repro.core.smartsplit import (repick_split, smartsplit,
                                    smartsplit_exhaustive)
-from repro.core.topsis import (column_normalise, link_weights, topsis_rank,
-                               topsis_select)
+from repro.core.topsis import (chain_link_weights, column_normalise,
+                               link_weights, topsis_rank, topsis_select)
 
 __all__ = [
     "ALGORITHMS", "coc", "cos", "ebo", "lbo", "mbo", "rs",
-    "LayerProfile", "ModelProfile", "client_memory", "energy_terms",
-    "evaluate_objectives", "feasible_mask", "latency_terms", "total_energy",
+    "ChainPlan", "MultiCutPlan", "SplitPlan",
+    "FRAME_HEADER_BYTES", "LayerProfile", "ModelProfile",
+    "chain_feasible_mask", "chain_stage_hop_times", "client_memory",
+    "energy_terms", "evaluate_chain_objectives", "evaluate_objectives",
+    "feasible_mask", "latency_terms", "pipeline_latency", "total_energy",
     "total_latency",
     "CONV_DTYPES", "conv_dtype", "dtype_bytes", "policy_jnp_dtype",
-    "PAPER_ENV_J6", "PAPER_ENV_NOTE8", "PROFILES", "TPU_EDGE_CLOUD",
-    "TPU_TWO_POD", "DeviceTier", "LinkProfile", "NetworkState",
-    "TwoTierHardware", "tpu_pod_tier",
+    "ETH_100MBPS", "ETH_1GBPS", "PAPER_CORE", "PAPER_EDGE", "PAPER_ENV_J6",
+    "PAPER_ENV_NOTE8", "PAPER_REGIONAL", "PROFILES", "TPU_EDGE_CLOUD",
+    "TPU_TWO_POD", "ChainHardware", "DeviceTier", "LinkProfile",
+    "NetworkState", "TwoTierHardware", "chain_of", "paper_chain",
+    "tpu_pod_tier",
+    "evaluate_multicut", "repick_chain", "smartsplit_chain",
+    "smartsplit_multicut",
     "NSGA2Config", "NSGA2Result", "nsga2",
     "crowding_distance", "exhaustive_pareto", "non_dominated_sort",
     "pareto_front_mask",
-    "SplitPlan", "repick_split", "smartsplit", "smartsplit_exhaustive",
-    "column_normalise", "link_weights", "topsis_rank", "topsis_select",
+    "repick_split", "smartsplit", "smartsplit_exhaustive",
+    "chain_link_weights", "column_normalise", "link_weights", "topsis_rank",
+    "topsis_select",
 ]

@@ -29,7 +29,12 @@ import dataclasses
 import numpy as np
 
 from repro.core.dtype_policy import conv_dtype, dtype_bytes
-from repro.core.hardware import DeviceTier, TwoTierHardware
+from repro.core.hardware import ChainHardware, DeviceTier, TwoTierHardware
+
+# Per-transfer framing overhead (crc32 + length) the reliable transfer
+# layer adds to every wire attempt -- runtime/transfer.py aliases this, so
+# the pipeline cost model and the executor charge the same bytes.
+FRAME_HEADER_BYTES = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,6 +238,152 @@ def feasible_mask(profile: ModelProfile, hw: TwoTierHardware,
     else:
         rng_ok = (idx >= 1) & (idx <= L - 1)
     return mem_ok & rng_ok
+
+
+# ---------------------------------------------------------------------------
+# Chain (K-tier) generalisation with microbatch pipelining
+# ---------------------------------------------------------------------------
+def _chain_edges(profile: ModelProfile, genomes: np.ndarray) -> np.ndarray:
+    """(n, K+1) stage-edge matrix [0 | sorted cuts | L] per genome row."""
+    L = profile.num_layers
+    cuts = np.sort(np.asarray(genomes, np.int64), axis=1)
+    n = cuts.shape[0]
+    return np.concatenate([np.zeros((n, 1), np.int64), cuts,
+                           np.full((n, 1), L, np.int64)], axis=1)
+
+
+def chain_stage_hop_times(profile: ModelProfile, hw: ChainHardware,
+                          genomes: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-stage compute and per-hop transfer seconds for cut vectors.
+
+    genomes: (n, K-1) cut points (unsorted ok; sorted internally).
+    Returns ``(stage_T, hop_T)`` with shapes (n, K) and (n, K-1) -- the
+    whole-batch times the pipeline latency model (and the chain runtime's
+    virtual-clock schedule) are built from."""
+    edges = _chain_edges(profile, genomes)
+    cf = profile.cum_flops()
+    cm = profile.cum_mem()
+    bound = profile.boundary()
+    n, K = edges.shape[0], len(hw.tiers)
+    stage_T = np.zeros((n, K))
+    for k, tier in enumerate(hw.tiers):
+        f_k = cf[edges[:, k + 1]] - cf[edges[:, k]]
+        m_k = cm[edges[:, k + 1]] - cm[edges[:, k]]
+        stage_T[:, k] = _tier_compute_time(tier, m_k, f_k, m_k)
+    hop_T = np.zeros((n, K - 1))
+    for k, link in enumerate(hw.links):
+        hop_T[:, k] = bound[edges[:, k + 1]] / link.bandwidth
+    return stage_T, hop_T
+
+
+def pipeline_latency(stage_T: np.ndarray, hop_T: np.ndarray,
+                     microbatches: int = 1,
+                     link_bandwidths: np.ndarray | None = None
+                     ) -> np.ndarray:
+    """End-to-end chain latency with M microbatches (GPipe-style).
+
+    Each whole-batch unit time T (stage computes and hop transfers,
+    interleaved) becomes M per-microbatch units of T/M; the first
+    microbatch fills the pipeline in sum(T)/M and the remaining M-1
+    drain behind the slowest unit:
+
+        latency = (sum_i T_i + (M - 1) * max_i T_i) / M
+
+    M=1 reduces exactly to the sequential sum the two-tier paper model
+    uses.  ``link_bandwidths`` (per hop, bytes/s) prices the extra
+    framing headers the M-way split puts on each hop -- the term that
+    keeps the optimiser honest about oversplitting tiny boundaries."""
+    if microbatches < 1:
+        raise ValueError(
+            f"microbatches must be >= 1, got {microbatches}")
+    # Interleave [stage0, hop0, stage1, hop1, ..., stageK-1] -- the actual
+    # pipeline unit order (and, for K=2 at M=1, the exact t_c + t_u + t_s
+    # summation order of the two-tier model).
+    n, K = stage_T.shape
+    units = np.zeros((n, 2 * K - 1))
+    units[:, 0::2] = stage_T
+    units[:, 1::2] = hop_T
+    total = units.sum(axis=1)
+    if microbatches == 1:
+        return total
+    lat = (total + (microbatches - 1) * units.max(axis=1)) / microbatches
+    if link_bandwidths is not None:
+        overhead = (microbatches - 1) * FRAME_HEADER_BYTES
+        lat = lat + (overhead / np.asarray(link_bandwidths, float)).sum()
+    return lat
+
+
+def chain_feasible_mask(profile: ModelProfile, hw: ChainHardware,
+                        genomes: np.ndarray) -> np.ndarray:
+    """Chain constraints: every stage non-empty, every tier within its
+    memory budget (the K-tier Eq. 17)."""
+    edges = _chain_edges(profile, genomes)
+    cm = profile.cum_mem()
+    ok = (np.diff(edges, axis=1) >= 1).all(axis=1)
+    for k, tier in enumerate(hw.tiers):
+        m_k = cm[edges[:, k + 1]] - cm[edges[:, k]]
+        ok &= m_k <= tier.memory_budget
+    return ok
+
+
+def evaluate_chain_objectives(profile: ModelProfile, hw: ChainHardware,
+                              genomes: np.ndarray, f3_mode: str = "full",
+                              microbatches: int = 1) -> np.ndarray:
+    """(n, 3) chain objectives -- the exact K-tier generalisation of
+    ``evaluate_objectives``.
+
+    f1: pipeline latency over stage computes + hop uploads (download
+        excluded per paper Eq. 5; M=1 degenerates to the sequential sum,
+        so a K=2 chain reproduces the two-tier rows bit-for-bit).
+    f2: battery-billed energy -- every tier except the terminal one
+        (the paper's Eq. 13 server exemption, generalised: the core end
+        is grid-powered) plus per-hop transfer energy and the download
+        radio term on hop 0 (the device's radio).
+    f3: first-tier memory, ``client_memory`` semantics (constraints on
+        the other tiers' budgets live in ``chain_feasible_mask``)."""
+    edges = _chain_edges(profile, genomes)
+    cf = profile.cum_flops()
+    cm = profile.cum_mem()
+    bound = profile.boundary()
+    stage_T, hop_T = chain_stage_hop_times(profile, hw, genomes)
+    bws = np.array([link.bandwidth for link in hw.links])
+    lat = pipeline_latency(stage_T, hop_T, microbatches,
+                           link_bandwidths=bws)
+
+    en = np.zeros(edges.shape[0])
+    for k, tier in enumerate(hw.tiers[:-1]):
+        if tier.is_roofline:
+            f_k = cf[edges[:, k + 1]] - cf[edges[:, k]]
+            m_k = cm[edges[:, k + 1]] - cm[edges[:, k]]
+            en += (f_k * tier.pj_per_flop
+                   + m_k * tier.pj_per_hbm_byte) * 1e-12
+        else:
+            en += tier.compute_power_w() * stage_T[:, k]
+    for k, link in enumerate(hw.links):
+        b_k = bound[edges[:, k + 1]]
+        if link.pj_per_byte:
+            en += b_k * link.pj_per_byte * 1e-12
+        else:
+            en += link.upload_power_w(link.bandwidth) * hop_T[:, k]
+    # result download, charged on the device's hop-0 radio (Eq. 12)
+    down = hw.links[0]
+    if down.pj_per_byte:
+        en += hw.download_bytes * down.pj_per_byte * 1e-12
+    else:
+        en += down.download_power_w(down.bandwidth) \
+            * (hw.download_bytes / down.bandwidth)
+    if microbatches > 1:
+        extra = (microbatches - 1) * FRAME_HEADER_BYTES
+        for k, link in enumerate(hw.links):
+            if link.pj_per_byte:
+                en += extra * link.pj_per_byte * 1e-12
+            else:
+                en += link.upload_power_w(link.bandwidth) \
+                    * (extra / link.bandwidth)
+
+    mem = client_memory(profile, f3_mode)[edges[:, 1]]
+    return np.stack([lat, en, mem], axis=1)
 
 
 def check_profile(profile: ModelProfile) -> None:

@@ -120,6 +120,62 @@ class TwoTierHardware:
         return dataclasses.replace(self, link=link)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChainHardware:
+    """K tiers connected by K-1 links -- the N-tier deployment shape
+    (device -> edge -> regional -> core).  ``TwoTierHardware`` is the
+    K=2 degenerate instance (see ``chain_of``); the chain planner
+    (``core.multicut.smartsplit_chain``) and the chain runtime
+    (``runtime.ChainRuntime``) both consume this."""
+
+    tiers: tuple[DeviceTier, ...]
+    links: tuple[LinkProfile, ...]
+    download_bytes: float = 4096.0  # result payload d (paper Eq. 11)
+
+    def __post_init__(self):
+        if len(self.tiers) < 2:
+            raise ValueError(
+                f"ChainHardware needs >= 2 tiers, got {len(self.tiers)}")
+        if len(self.links) != len(self.tiers) - 1:
+            raise ValueError(
+                f"ChainHardware tier/link mismatch: {len(self.tiers)} "
+                f"tiers need {len(self.tiers) - 1} links, got "
+                f"{len(self.links)}")
+
+    @property
+    def num_tiers(self) -> int:
+        return len(self.tiers)
+
+    def with_link_bandwidths(
+            self, bandwidths: "tuple[float | None, ...]"
+    ) -> "ChainHardware":
+        """The same chain under per-hop effective bandwidths (bytes/s);
+        ``None`` entries keep that hop's nominal bandwidth.  The runtime
+        re-pick path evaluates the cached Pareto front against this."""
+        if len(bandwidths) != len(self.links):
+            raise ValueError(
+                f"need {len(self.links)} per-hop bandwidths, got "
+                f"{len(bandwidths)}")
+        links = []
+        for link, bw in zip(self.links, bandwidths):
+            if bw is None:
+                links.append(link)
+                continue
+            if bw <= 0:
+                raise ValueError(
+                    f"bandwidth must be positive, got {bw} for {link.name}")
+            links.append(dataclasses.replace(link, bandwidth=float(bw)))
+        return dataclasses.replace(self, links=tuple(links))
+
+
+def chain_of(hw: TwoTierHardware) -> ChainHardware:
+    """The K=2 chain view of a two-tier environment (same tiers, same
+    link, same download payload) -- the paper case as a degenerate
+    chain instead of a separate code path."""
+    return ChainHardware(tiers=(hw.client, hw.server), links=(hw.link,),
+                         download_bytes=hw.download_bytes)
+
+
 @dataclasses.dataclass
 class NetworkState:
     """Mutable runtime view of a link (deliberately NOT frozen).
@@ -236,3 +292,51 @@ PROFILES = {
     "tpu-edge-cloud": TPU_EDGE_CLOUD,
     "tpu-two-pod": TPU_TWO_POD,
 }
+
+
+# ---------------------------------------------------------------------------
+# N-tier chain profiles (device -> edge -> regional -> core).
+# ---------------------------------------------------------------------------
+# Intermediate tiers reuse the paper's cores*speed compute model with
+# grid-powered servers (energy_k = 0: only the device's battery is billed,
+# matching the paper's Eq. 13 server exemption).
+PAPER_EDGE = DeviceTier(
+    name="paper-edge-server",
+    cores=8, speed_hz=2.5e9,
+    memory_budget=16 * 1024**3,
+    energy_k=0.0,
+)
+PAPER_REGIONAL = DeviceTier(
+    name="paper-regional-dc",
+    cores=16, speed_hz=3.0e9,
+    memory_budget=32 * 1024**3,
+    energy_k=0.0,
+)
+PAPER_CORE = DeviceTier(
+    name="paper-core-dc",
+    cores=32, speed_hz=3.0e9,
+    memory_budget=64 * 1024**3,
+    energy_k=0.0,
+)
+# Wired backhaul links: no radio power model (the device's Wi-Fi hop is
+# the only one drawing battery), bandwidth rises toward the core.
+ETH_100MBPS = LinkProfile(name="ethernet-100mbps", bandwidth=100e6 / 8)
+ETH_1GBPS = LinkProfile(name="ethernet-1gbps", bandwidth=1e9 / 8)
+
+
+def paper_chain(num_tiers: int) -> ChainHardware:
+    """The paper smartphone fronting a K-tier serving chain.
+
+    K=2 is exactly ``chain_of(PAPER_ENV_J6)``; K=3 adds an edge server
+    behind the Wi-Fi hop; K=4 inserts a regional DC between edge and
+    core (the arxiv 2509.06049 device/edge/core topology)."""
+    if num_tiers == 2:
+        return chain_of(PAPER_ENV_J6)
+    if num_tiers == 3:
+        return ChainHardware(tiers=(SAMSUNG_J6, PAPER_EDGE, PAPER_CORE),
+                             links=(WIFI_10MBPS, ETH_100MBPS))
+    if num_tiers == 4:
+        return ChainHardware(
+            tiers=(SAMSUNG_J6, PAPER_EDGE, PAPER_REGIONAL, PAPER_CORE),
+            links=(WIFI_10MBPS, ETH_100MBPS, ETH_1GBPS))
+    raise ValueError(f"paper_chain supports 2-4 tiers, got {num_tiers}")

@@ -11,6 +11,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.chainplan import ChainPlan
+from repro.core.chainplan import SplitPlan as SplitPlan  # noqa: F401  (re-export)
 from repro.core.costs import (ModelProfile, evaluate_objectives,
                               feasible_mask)
 from repro.core.hardware import TwoTierHardware
@@ -21,25 +23,18 @@ from repro.core.topsis import link_weights, topsis_select
 _PENALTY = 1e30
 
 
-@dataclasses.dataclass(frozen=True)
-class SplitPlan:
-    """The optimiser's output: l1 layers on the client, rest on the server."""
-
-    model: str
-    split_index: int                 # l1
-    num_layers: int                  # L
-    objectives: tuple[float, float, float]   # (latency s, energy J, mem bytes)
-    pareto_indices: tuple[int, ...]  # Pareto-set split indices (for plots)
-    pareto_F: np.ndarray             # their objective values
-    hardware: str
-
-    @property
-    def client_layers(self) -> int:
-        return self.split_index
-
-    @property
-    def server_layers(self) -> int:
-        return self.num_layers - self.split_index
+def _two_tier_plan(profile: ModelProfile, hw: TwoTierHardware,
+                   l1: int, pareto_l1: np.ndarray,
+                   pareto_F: np.ndarray, F_all: np.ndarray) -> ChainPlan:
+    """Package a picked K=2 split as the unified chain plan."""
+    return ChainPlan(model=profile.name, num_layers=profile.num_layers,
+                     cuts=(l1,),
+                     objectives=tuple(float(x) for x in F_all[l1]),
+                     pareto_cuts=np.asarray(pareto_l1,
+                                            np.int64).reshape(-1, 1),
+                     pareto_F=pareto_F,
+                     links=(hw.link,),
+                     tiers=(hw.client.name, hw.server.name))
 
 
 def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
@@ -77,10 +72,7 @@ def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
     pick = topsis_select(pareto_F, feasible=feas, weights=weights,
                          use_anti_ideal=use_anti_ideal)
     l1 = int(pareto_l1[pick])
-    return SplitPlan(model=profile.name, split_index=l1, num_layers=L,
-                     objectives=tuple(float(x) for x in F_all[l1]),
-                     pareto_indices=tuple(int(x) for x in pareto_l1),
-                     pareto_F=pareto_F, hardware=hw.client.name)
+    return _two_tier_plan(profile, hw, l1, pareto_l1, pareto_F, F_all)
 
 
 def repick_split(plan: SplitPlan, profile: ModelProfile,
@@ -123,9 +115,11 @@ def repick_split(plan: SplitPlan, profile: ModelProfile,
     pick = topsis_select(F_all[idx], feasible=feas, weights=weights)
     l1 = int(idx[pick])
     return dataclasses.replace(
-        plan, split_index=l1,
+        plan, cuts=(l1,),
         objectives=tuple(float(x) for x in F_all[l1]),
-        pareto_F=F_all[idx], hardware=hw.client.name)
+        pareto_F=F_all[idx],
+        links=(hw.link,),
+        tiers=(hw.client.name, hw.server.name))
 
 
 def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
@@ -147,7 +141,5 @@ def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
     pick = topsis_select(F_all[pareto_l1], feasible=feas[pareto_l1],
                          weights=weights, use_anti_ideal=use_anti_ideal)
     l1 = int(pareto_l1[pick])
-    return SplitPlan(model=profile.name, split_index=l1, num_layers=L,
-                     objectives=tuple(float(x) for x in F_all[l1]),
-                     pareto_indices=tuple(int(x) for x in pareto_l1),
-                     pareto_F=F_all[pareto_l1], hardware=hw.client.name)
+    return _two_tier_plan(profile, hw, l1, pareto_l1, F_all[pareto_l1],
+                          F_all)

@@ -92,3 +92,20 @@ def link_weights(bandwidth_ratio: float,
     w[0] *= r
     w[1] *= math.sqrt(r)
     return w
+
+
+def chain_link_weights(bandwidth_ratios,
+                       base: tuple[float, float, float] = (1.0, 1.0, 1.0)
+                       ) -> np.ndarray:
+    """Per-objective weights for a chain re-pick under per-hop degradation.
+
+    ``bandwidth_ratios`` holds one planned/current ratio per hop.  The
+    pipeline latency term is dominated by the slowest unit, and every hop's
+    payload enters f1/f2 through the same 1/B structure as the two-tier
+    case, so the re-weighting is driven by the *worst* hop: a chain is as
+    degraded as its most degraded link.  Degenerates to ``link_weights``
+    for a single hop."""
+    ratios = [float(r) for r in bandwidth_ratios]
+    if not ratios:
+        raise ValueError("chain_link_weights needs >= 1 bandwidth ratio")
+    return link_weights(max(ratios), base=base)

@@ -5,11 +5,12 @@ the SmartSplit placement first (prints the chosen split and its predicted
 objective triple).
 
 ``--cnn <model>`` instead serves one of the paper's CNNs through the
-fault-tolerant split runtime (``repro.runtime``): plans the split on the
-paper hardware environment, executes requests across a ``FaultyLink``
-whose fault profile comes from ``REPRO_LINK_*`` env knobs (or ``--drop``),
-and reports recoveries -- retries, device fallbacks, Pareto-front
-re-picks -- next to throughput."""
+fault-tolerant chain runtime (``repro.runtime``): plans a K-tier chain
+placement (``--tiers``, K=2 being the paper's phone/cloud environment),
+executes microbatch-pipelined requests across per-hop ``FaultyLink``s
+whose fault profiles come from ``REPRO_LINK_*`` / ``REPRO_LINK{k}_*``
+env knobs (or ``--drop``), and reports recoveries -- retries, stage
+merges, Pareto-front re-picks -- next to throughput."""
 from __future__ import annotations
 
 import argparse
@@ -31,30 +32,48 @@ from repro.serving.engine import Engine
 
 
 def serve_cnn(args) -> None:
-    """Fault-tolerant CNN split serving (the paper's actual workload)."""
-    from repro.core import PAPER_ENV_J6, smartsplit_exhaustive
+    """Fault-tolerant CNN chain serving (the paper's actual workload).
+
+    Plans a K-tier chain placement (``--tiers``; K=2 is the paper's
+    phone/cloud split bit-for-bit) and executes requests through
+    ``ChainRuntime``: per-hop ``FaultyLink``s on a shared virtual clock,
+    microbatch pipelining (``--microbatch``), stage-merge / re-pick
+    degradation.  Per-hop fault knobs: ``REPRO_LINK{k}_*`` overrides
+    ``REPRO_LINK_*`` for hop k."""
+    import os
+
+    from repro.core import paper_chain, smartsplit_chain
     from repro.models import cnn as cnn_lib
     from repro.models.profiles import cnn_profile
-    from repro.runtime import FaultSpec, RetryPolicy, SplitRuntime, \
-        link_from_env
+    from repro.runtime import (ChainRuntime, FaultSpec, RetryPolicy,
+                               chain_links_from_env)
 
     policy = conv_dtype(args.dtype)
-    hw = PAPER_ENV_J6
-    prof = cnn_profile(args.cnn, dtype=policy)
-    plan = smartsplit_exhaustive(prof, hw)
+    num_tiers = args.tiers if args.tiers is not None \
+        else int(os.environ.get("REPRO_CHAIN_TIERS", 2))
+    microbatch = args.microbatch if args.microbatch is not None \
+        else int(os.environ.get("REPRO_CHAIN_MICROBATCH", 1))
+    hw = paper_chain(num_tiers)
+    prof = cnn_profile(args.cnn, batch=args.batch, dtype=policy)
+    plan = smartsplit_chain(prof, hw, microbatches=microbatch)
     lat, en, mem = plan.objectives
-    print(f"SmartSplit: l1={plan.split_index}/{prof.num_layers} "
+    chain = " -> ".join(f"{t}[{a}:{b})" for t, (a, b)
+                        in zip(plan.tiers, plan.stages()))
+    print(f"SmartSplit chain: {chain}")
+    print(f"  cuts={list(plan.cuts)}/{prof.num_layers} M={microbatch} "
           f"latency={lat:.2e}s energy={en:.2e}J "
-          f"client-mem={mem / 2**20:.1f}MiB ({policy})")
+          f"device-mem={mem / 2**20:.1f}MiB ({policy})")
 
-    faults = FaultSpec(drop_rate=args.drop) if args.drop else None
-    link = link_from_env(hw.link.bandwidth, faults=faults)
-    rt = SplitRuntime(args.cnn, cnn_lib.init_cnn(
+    links = chain_links_from_env([link.bandwidth for link in hw.links])
+    if args.drop:
+        for link in links:
+            link.faults = FaultSpec(drop_rate=args.drop)
+    rt = ChainRuntime(args.cnn, cnn_lib.init_cnn(
         jax.random.PRNGKey(0), cnn_lib.CNN_MODELS[args.cnn]),
-        plan, prof, hw, link=link, dtype=policy,
-        policy=RetryPolicy.from_env())
+        plan, prof, hw, links=links, dtype=policy,
+        microbatches=microbatch, policy=RetryPolicy.from_env())
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(1,) + cnn_lib.INPUT_SHAPE),
+    x = jnp.asarray(rng.normal(size=(args.batch,) + cnn_lib.INPUT_SHAPE),
                     jnp.float32)
     t0 = time.perf_counter()
     for _ in range(args.requests):
@@ -64,12 +83,17 @@ def serve_cnn(args) -> None:
     s = rt.stats()
     print(f"served {s['requests']} requests in {dt:.1f}s "
           f"({s['requests'] / dt:.2f} req/s); recovered={s['recovered']} "
-          f"fallback_device={s['fallback_device']} "
-          f"repicks={s['repicks']} "
+          f"merges={s['merges']} repicks={s['repicks']} "
           f"proactive={s['proactive_resplits']} "
-          f"link={s['link']['sends']} sends / "
-          f"{s['link']['dropped']} dropped / "
-          f"{s['link']['timeouts']} timeouts")
+          f"active_cuts={s['active_cuts']}")
+    for h in s["hops"]:
+        link_c = h["link"]
+        print(f"  hop{h['hop']}: attempts={h['attempts']} "
+              f"retx={h['retransmitted_bytes']}B merges={h['merges']} "
+              f"est_bw={h['est_bandwidth']:.3g}B/s "
+              f"degradation={h['degradation']:.2f} "
+              f"({link_c['dropped']} dropped / {link_c['timeouts']} "
+              f"timeouts / {link_c['outage_hits']} outage-hits)")
 
 
 def main():
@@ -82,6 +106,16 @@ def main():
     ap.add_argument("--drop", type=float, default=0.0,
                     help="--cnn only: injected per-attempt drop rate "
                          "(REPRO_LINK_* env knobs cover the rest)")
+    ap.add_argument("--tiers", type=int, default=None,
+                    help="--cnn only: chain length K (2=paper phone/cloud, "
+                         "3=+edge, 4=+regional; default REPRO_CHAIN_TIERS "
+                         "or 2)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="--cnn only: pipeline depth M (default "
+                         "REPRO_CHAIN_MICROBATCH or 1)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="--cnn only: request batch size (microbatching "
+                         "splits this)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)

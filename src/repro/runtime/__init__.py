@@ -1,14 +1,18 @@
 """Fault-tolerant split-execution runtime: flaky-link channel model,
 reliable transfer (checksum/retry/timeout/backoff), EWMA link estimation,
-structured recovery events, and the ``SplitRuntime`` degradation loop
-(device fallback / cached-Pareto-front TOPSIS re-picks)."""
+structured recovery events, and the degradation loops -- ``SplitRuntime``
+for the paper's two-tier case, ``ChainRuntime`` for N-tier chains with
+microbatch pipelining (device fallback / stage merges / cached-Pareto-
+front TOPSIS re-picks)."""
 from repro.runtime.events import Event, EventLog
 from repro.runtime.faults import (FaultSpec, FaultyLink, LinkDropped,
                                   LinkError, LinkOutage, LinkTimeout,
+                                  VirtualClock, chain_links_from_env,
                                   link_from_env, parse_outages)
-from repro.runtime.link_estimator import EwmaLinkEstimator
-from repro.runtime.runtime import (InferenceResult, SplitRuntime,
-                                   SplitUnrecoverable)
+from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
+from repro.runtime.runtime import (ChainInferenceResult, ChainRuntime,
+                                   InferenceResult, SplitRuntime,
+                                   SplitUnrecoverable, microbatch_slices)
 from repro.runtime.transfer import (ChecksumError, RetryPolicy,
                                     TransferFailed, TransferOutcome,
                                     send_with_retry)
@@ -16,9 +20,11 @@ from repro.runtime.transfer import (ChecksumError, RetryPolicy,
 __all__ = [
     "Event", "EventLog",
     "FaultSpec", "FaultyLink", "LinkDropped", "LinkError", "LinkOutage",
-    "LinkTimeout", "link_from_env", "parse_outages",
-    "EwmaLinkEstimator",
-    "InferenceResult", "SplitRuntime", "SplitUnrecoverable",
+    "LinkTimeout", "VirtualClock", "chain_links_from_env", "link_from_env",
+    "parse_outages",
+    "EwmaLinkEstimator", "chain_estimators",
+    "ChainInferenceResult", "ChainRuntime", "InferenceResult",
+    "SplitRuntime", "SplitUnrecoverable", "microbatch_slices",
     "ChecksumError", "RetryPolicy", "TransferFailed", "TransferOutcome",
     "send_with_retry",
 ]

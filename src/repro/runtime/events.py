@@ -24,6 +24,7 @@ CHECKSUM_FAIL = "checksum_fail"      # delivered but corrupt (crc32)
 BACKOFF = "backoff"                  # retry wait added to the clock
 GIVE_UP = "give_up"                  # retries exhausted for one transfer
 FALLBACK_DEVICE = "fallback_device"  # degraded to full on-device run
+STAGE_MERGE = "stage_merge"          # collapsed a cut onto the upstream tier
 REPICK = "repick"                    # re-picked split from Pareto front
 PROACTIVE_RESPLIT = "proactive_resplit"  # EWMA-triggered re-split
 UNRECOVERABLE = "unrecoverable"      # no fallback or re-pick remained

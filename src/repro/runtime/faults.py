@@ -36,6 +36,27 @@ import numpy as np
 ENV_PREFIX = "REPRO_LINK_"
 
 
+class VirtualClock:
+    """A monotone virtual-time source shared by every hop of a chain.
+
+    The two-tier runtime had one link and therefore one clock; an N-hop
+    chain needs its hops to agree on *when* things happen (an outage
+    window on hop 2 is a window in chain time, not hop-2-activity time).
+    ``advance_to`` is a max -- concurrent activity on different hops can
+    report out of order without ever moving time backwards."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def advance(self, seconds: float) -> None:
+        if seconds < 0:
+            raise ValueError(f"cannot advance by {seconds}")
+        self.now += seconds
+
+    def advance_to(self, t: float) -> None:
+        self.now = max(self.now, float(t))
+
+
 class LinkError(RuntimeError):
     """One failed transfer attempt; ``elapsed_s`` is the virtual time the
     attempt consumed (the link clock has already advanced by it)."""
@@ -99,7 +120,8 @@ class FaultyLink:
 
     def __init__(self, bandwidth: float, *, latency_s: float = 0.0,
                  faults: FaultSpec = FaultSpec(), seed: int = 0,
-                 bandwidth_profile: tuple[tuple[float, float], ...] = ()):
+                 bandwidth_profile: tuple[tuple[float, float], ...] = (),
+                 clock: VirtualClock | None = None):
         if bandwidth <= 0:
             raise ValueError(f"bandwidth must be positive, got {bandwidth}")
         self.bandwidth = float(bandwidth)
@@ -108,7 +130,9 @@ class FaultyLink:
         self.seed = int(seed)
         self.bandwidth_profile = tuple(sorted(bandwidth_profile))
         self._rng = np.random.default_rng(self.seed)
-        self.clock = 0.0          # virtual seconds of link activity
+        # virtual seconds of link activity; a chain passes one shared
+        # VirtualClock to all its hops so their timelines agree
+        self._clock = clock if clock is not None else VirtualClock()
         # counters (all attempts, successful or not)
         self.sends = 0
         self.delivered = 0
@@ -120,11 +144,17 @@ class FaultyLink:
         self.bytes_lost = 0
 
     # -- clock ---------------------------------------------------------
+    @property
+    def clock(self) -> float:
+        return self._clock.now
+
+    @clock.setter
+    def clock(self, value: float) -> None:
+        self._clock.now = float(value)
+
     def advance(self, seconds: float) -> None:
         """Spend non-transfer virtual time on the clock (backoff waits)."""
-        if seconds < 0:
-            raise ValueError(f"cannot advance by {seconds}")
-        self.clock += seconds
+        self._clock.advance(seconds)
 
     def bandwidth_at(self, t: float) -> float:
         """Effective bytes/s at virtual time ``t``."""
@@ -146,16 +176,30 @@ class FaultyLink:
 
     # -- transfer ------------------------------------------------------
     def send(self, data: bytes, timeout_s: float) -> tuple[bytes, float]:
-        """Attempt one transfer.  Returns ``(delivered, elapsed_s)`` and
-        advances the clock; raises ``LinkDropped`` / ``LinkTimeout`` /
-        ``LinkOutage`` on failure (clock advanced by the timeout either
-        way -- a failed attempt is never free).  A *corrupted* delivery
-        returns normally with a flipped byte: callers must checksum."""
+        """Attempt one transfer starting now.  Returns
+        ``(delivered, elapsed_s)`` and advances the clock; raises
+        ``LinkDropped`` / ``LinkTimeout`` / ``LinkOutage`` on failure
+        (clock advanced by the timeout either way -- a failed attempt is
+        never free).  A *corrupted* delivery returns normally with a
+        flipped byte: callers must checksum."""
+        return self.send_at(self.clock, data, timeout_s)
+
+    def send_at(self, t0: float, data: bytes,
+                timeout_s: float) -> tuple[bytes, float]:
+        """Attempt one transfer starting at virtual time ``t0``.
+
+        The chain runtime schedules hop sends from its pipeline model, so
+        a send's start time comes from the schedule (compute finish /
+        link free), not from "whenever the shared clock happens to be".
+        Fault draws happen in call order (deterministic per seed); the
+        shared clock only ever moves forward (``advance_to``), so
+        ``send()`` -- where ``t0 == clock`` -- behaves exactly as
+        before."""
         if timeout_s <= 0:
             raise ValueError(f"timeout_s must be positive, got {timeout_s}")
         self.sends += 1
         n = len(data)
-        t0 = self.clock
+        t0 = float(t0)
         # Draw every category each send so the schedule is size-invariant
         # (a scaled uniform, not integers(0, n): bounded-int draws consume
         # a size-dependent amount of the stream via rejection sampling).
@@ -167,21 +211,21 @@ class FaultyLink:
         if self.outage_overlaps(t0, t0 + min(xfer, timeout_s)):
             self.outage_hits += 1
             self.bytes_lost += n
-            self.clock = t0 + timeout_s
+            self._clock.advance_to(t0 + timeout_s)
             raise LinkOutage(f"outage window at t={t0:.3f}s", timeout_s)
         if u_drop < self.faults.drop_rate:
             self.dropped += 1
             self.bytes_lost += n
-            self.clock = t0 + timeout_s
+            self._clock.advance_to(t0 + timeout_s)
             raise LinkDropped(f"payload dropped at t={t0:.3f}s", timeout_s)
         if xfer > timeout_s:
             self.timeouts += 1
             self.bytes_lost += n
-            self.clock = t0 + timeout_s
+            self._clock.advance_to(t0 + timeout_s)
             raise LinkTimeout(
                 f"transfer needs {xfer:.3f}s > timeout {timeout_s:.3f}s",
                 timeout_s)
-        self.clock = t0 + xfer
+        self._clock.advance_to(t0 + xfer)
         self.delivered += 1
         self.bytes_delivered += n
         if u_corrupt < self.faults.corrupt_rate and n:
@@ -200,8 +244,18 @@ class FaultyLink:
                 "bytes_lost": self.bytes_lost, "clock_s": self.clock}
 
 
-def _env_float(name: str, default: float) -> float:
-    raw = os.environ.get(ENV_PREFIX + name)
+def _env_raw(name: str, hop: int | None = None) -> str | None:
+    """Env lookup with per-hop override: ``REPRO_LINK{hop}_X`` wins over
+    the chain-wide ``REPRO_LINK_X``."""
+    if hop is not None:
+        raw = os.environ.get(f"REPRO_LINK{hop}_{name}")
+        if raw is not None:
+            return raw
+    return os.environ.get(ENV_PREFIX + name)
+
+
+def _env_float(name: str, default: float, hop: int | None = None) -> float:
+    raw = _env_raw(name, hop)
     return default if raw is None else float(raw)
 
 
@@ -218,7 +272,9 @@ def parse_outages(raw: str) -> tuple[tuple[float, float], ...]:
 
 
 def link_from_env(bandwidth: float, *, seed: int | None = None,
-                  faults: FaultSpec | None = None) -> FaultyLink:
+                  faults: FaultSpec | None = None,
+                  hop: int | None = None,
+                  clock: VirtualClock | None = None) -> FaultyLink:
     """Build a ``FaultyLink`` from ``REPRO_LINK_*`` env knobs.
 
     REPRO_LINK_BW        bytes/s (default: the ``bandwidth`` argument,
@@ -231,18 +287,45 @@ def link_from_env(bandwidth: float, *, seed: int | None = None,
     REPRO_LINK_OUTAGES   "start:end[,start:end]" virtual-time windows
     REPRO_LINK_SEED      fault-schedule seed (default 0)
 
+    With ``hop`` given, ``REPRO_LINK{hop}_X`` (e.g. ``REPRO_LINK1_DROP``)
+    overrides the chain-wide knob for that hop only -- how the chaos
+    harness aims a fault at one specific link of a chain.
+
     Explicit ``faults``/``seed`` arguments win over the environment."""
     if faults is None:
         faults = FaultSpec(
-            drop_rate=_env_float("DROP", 0.0),
-            corrupt_rate=_env_float("CORRUPT", 0.0),
-            delay_rate=_env_float("DELAY", 0.0),
-            delay_s=_env_float("DELAY_S", 0.5),
-            outages=parse_outages(os.environ.get(ENV_PREFIX + "OUTAGES",
-                                                 "")),
+            drop_rate=_env_float("DROP", 0.0, hop),
+            corrupt_rate=_env_float("CORRUPT", 0.0, hop),
+            delay_rate=_env_float("DELAY", 0.0, hop),
+            delay_s=_env_float("DELAY_S", 0.5, hop),
+            outages=parse_outages(_env_raw("OUTAGES", hop) or ""),
         )
     if seed is None:
-        seed = int(_env_float("SEED", 0))
-    return FaultyLink(_env_float("BW", bandwidth),
-                      latency_s=_env_float("LATENCY", 0.0),
-                      faults=faults, seed=seed)
+        seed = int(_env_float("SEED", 0, hop))
+    return FaultyLink(_env_float("BW", bandwidth, hop),
+                      latency_s=_env_float("LATENCY", 0.0, hop),
+                      faults=faults, seed=seed, clock=clock)
+
+
+def chain_links_from_env(bandwidths, *, seed: int | None = None,
+                         clock: VirtualClock | None = None
+                         ) -> list[FaultyLink]:
+    """One env-configured ``FaultyLink`` per hop, all on a shared clock.
+
+    bandwidths: nominal bytes/s per hop (e.g. from the plan's links).
+    seed: base fault-schedule seed; hop k draws from ``seed + k`` so the
+      hops' fault streams are independent (REPRO_LINK{k}_SEED overrides
+      per hop, REPRO_LINK_SEED overrides the base)."""
+    clock = clock if clock is not None else VirtualClock()
+    links = []
+    for k, bw in enumerate(bandwidths):
+        if os.environ.get(f"REPRO_LINK{k}_SEED") is not None:
+            hop_seed = None      # per-hop env knob wins verbatim
+        else:
+            env_base = os.environ.get(ENV_PREFIX + "SEED")
+            base = int(env_base) if env_base is not None else \
+                (int(seed) if seed is not None else 0)
+            hop_seed = base + k
+        links.append(link_from_env(bw, seed=hop_seed, hop=k, clock=clock))
+    return links
+

@@ -47,3 +47,12 @@ class EwmaLinkEstimator:
         """planned/estimated bandwidth: 1 = nominal, >1 = degraded (the
         ratio ``core.topsis.link_weights`` and the re-pick consume)."""
         return self.planned / self.bandwidth
+
+
+def chain_estimators(planned_bandwidths, alpha: float = 0.3,
+                     floor: float = 1.0) -> list[EwmaLinkEstimator]:
+    """One independent EWMA estimator per hop of a chain, each seeded
+    with that hop's planning bandwidth (``core.topsis.chain_link_weights``
+    consumes the resulting per-hop degradation ratios)."""
+    return [EwmaLinkEstimator(bw, alpha=alpha, floor=floor)
+            for bw in planned_bandwidths]

@@ -28,18 +28,22 @@ the chaos harness (benchmarks/robustness_bench.py) both key on it.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costs import ModelProfile
-from repro.core.hardware import NetworkState, TwoTierHardware
+from repro.core.chainplan import ChainPlan
+from repro.core.costs import ModelProfile, _tier_compute_time
+from repro.core.hardware import (ChainHardware, NetworkState,
+                                 TwoTierHardware, chain_of)
+from repro.core.multicut import repick_chain
 from repro.core.smartsplit import SplitPlan, repick_split
 from repro.models import cnn as cnn_lib
 from repro.runtime import events as ev
 from repro.runtime.events import Event, EventLog
-from repro.runtime.faults import FaultyLink
-from repro.runtime.link_estimator import EwmaLinkEstimator
+from repro.runtime.faults import FaultyLink, VirtualClock
+from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
 from repro.runtime.transfer import (RetryPolicy, TransferFailed,
                                     send_with_retry)
 
@@ -126,6 +130,12 @@ class SplitRuntime:
         self.n_fallback_device = 0
         self.n_repicks = 0
         self.n_proactive = 0
+        # per-hop transfer counters (one hop here; the chain runtime has
+        # K-1 -- same stats schema so the chaos artifact can always say
+        # *which* hop degraded)
+        self.hop_attempts = 0
+        self.hop_wire_bytes = 0
+        self.hop_goodput_bytes = 0
 
     # -- stages --------------------------------------------------------
     def _run(self, x, start: int, stop: int):
@@ -211,6 +221,9 @@ class SplitRuntime:
                 attempts += out.attempts
                 wire += out.wire_bytes
                 goodput += out.goodput_bytes
+                self.hop_attempts += out.attempts
+                self.hop_wire_bytes += out.wire_bytes
+                self.hop_goodput_bytes += out.goodput_bytes
                 self.estimator.observe(out.goodput_bytes,
                                        out.success_elapsed_s)
                 self.net.update(self.estimator.bandwidth)
@@ -221,6 +234,8 @@ class SplitRuntime:
             except TransferFailed as fail:
                 attempts += fail.attempts
                 wire += fail.wire_bytes
+                self.hop_attempts += fail.attempts
+                self.hop_wire_bytes += fail.wire_bytes
                 # the link burned fail.elapsed_s and delivered nothing
                 self.estimator.observe(0.0, fail.elapsed_s)
                 self.net.update(self.estimator.bandwidth, outage=True)
@@ -267,5 +282,377 @@ class SplitRuntime:
             "est_bandwidth": self.estimator.bandwidth,
             "degradation": self.estimator.degradation(),
             "link": self.link.counters(),
+            "hops": [{
+                "hop": 0,
+                "attempts": self.hop_attempts,
+                "wire_bytes": self.hop_wire_bytes,
+                "goodput_bytes": self.hop_goodput_bytes,
+                "retransmitted_bytes": (self.hop_wire_bytes
+                                        - self.hop_goodput_bytes),
+                "est_bandwidth": self.estimator.bandwidth,
+                "degradation": self.estimator.degradation(),
+                "link": self.link.counters(),
+            }],
+            "events": self.log.counts(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# N-tier chain execution
+# ---------------------------------------------------------------------------
+def microbatch_slices(batch: int, microbatches: int
+                      ) -> list[tuple[int, int]]:
+    """Contiguous [start, stop) microbatch slices of a batch: an even
+    split with the remainder spread over the leading microbatches.
+
+    Exposed so references can be computed at the same granularity --
+    XLA convs are NOT bitwise batch-size-invariant, so an M-microbatch
+    chain run is bit-identical to a single-device run *sliced the same
+    way* (and to the plain batched run only at M=1)."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    M = max(1, min(int(microbatches), batch))
+    sizes = [batch // M + (1 if i < batch % M else 0) for i in range(M)]
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+    return [(int(offsets[i]), int(offsets[i + 1])) for i in range(M)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainInferenceResult:
+    """One request's outcome through the N-stage pipeline."""
+
+    logits: jnp.ndarray
+    cuts: tuple[int, ...]          # cut vector the request finished under
+    planned_cuts: tuple[int, ...]  # active plan's cuts when it began
+    degraded: bool                 # any merge / re-pick happened
+    merged_hops: tuple[int, ...]   # original hop ids collapsed this request
+    attempts: int                  # wire attempts across all hops
+    chain_elapsed_s: float         # virtual makespan (pipeline schedule)
+    wire_bytes: int
+    goodput_bytes: int
+    microbatches: int              # M actually used (<= batch size)
+    events: tuple[Event, ...]
+
+    @property
+    def retransmitted_bytes(self) -> int:
+        return self.wire_bytes - self.goodput_bytes
+
+
+class ChainRuntime:
+    """Executes a ``ChainPlan`` over K tiers and K-1 (possibly faulty)
+    links with microbatch pipelining.
+
+    The generalisation of ``SplitRuntime``: every hop gets its own
+    ``FaultyLink`` (all on one shared ``VirtualClock``) and its own EWMA
+    bandwidth estimator.  The input batch is split into M microbatches;
+    hop transfers are scheduled against a per-tier / per-link resource
+    model, so microbatch m+1's stage-k compute overlaps microbatch m's
+    downstream hops exactly as ``core.costs.pipeline_latency`` prices it.
+    Numerics are schedule-independent: each microbatch's samples walk the
+    same layers whatever the timing, so concatenated logits stay
+    bit-identical to the single-device reference.
+
+    Degradation ladder when a hop exhausts its retries:
+
+    1. **stage merge** -- fold the downstream stage onto the upstream
+       tier (collapse the cut) if the merged stage fits that tier's
+       memory budget; the dead hop drops out of the chain for the rest
+       of the request and later microbatches.  For K=2 this is exactly
+       the on-device fallback.  Links are overlay paths: after a merge
+       the data crosses the *next* surviving hop's link.
+    2. **chain re-pick** -- TOPSIS over the plan's cached Pareto front
+       under the current per-hop bandwidth estimates
+       (``core.multicut.repick_chain``), never repeating a failed cut
+       vector; the request restarts its current microbatch from tier 0.
+    3. ``SplitUnrecoverable`` when neither remains.
+
+    microbatches: pipeline depth M (default: REPRO_CHAIN_MICROBATCH env,
+      else the plan's own ``microbatches`` field); clamped to the batch.
+    merge_fallback: None (default) = merge allowed iff the merged stage
+      fits the tier's memory budget; True/False forces the decision.
+    """
+
+    def __init__(self, model: str | list, params, plan: ChainPlan,
+                 profile: ModelProfile,
+                 hw: ChainHardware | TwoTierHardware, *,
+                 links: list[FaultyLink] | None = None,
+                 policy: RetryPolicy = RetryPolicy(),
+                 backend: str | None = None, dtype: str | None = None,
+                 microbatches: int | None = None,
+                 merge_fallback: bool | None = None,
+                 estimator_alpha: float = 0.3,
+                 resplit_ratio: float = 2.0,
+                 jitter_seed: int = 0,
+                 log: EventLog | None = None):
+        if isinstance(hw, TwoTierHardware):
+            hw = chain_of(hw)
+        self.layers = cnn_lib.CNN_MODELS[model] if isinstance(model, str) \
+            else model
+        if profile.num_layers != len(self.layers):
+            raise ValueError(
+                f"profile has {profile.num_layers} layers, model has "
+                f"{len(self.layers)}: plan and runtime would disagree")
+        if plan.num_tiers != hw.num_tiers:
+            raise ValueError(
+                f"plan has {plan.num_tiers} tiers, hardware has "
+                f"{hw.num_tiers}")
+        self.params = params
+        self.plan = plan                     # active (may be re-picked)
+        self.profile = profile
+        self.hw = hw
+        if links is None:
+            clock = VirtualClock()
+            links = [FaultyLink(link.bandwidth, clock=clock)
+                     for link in hw.links]
+        else:
+            links = list(links)
+            clock = links[0]._clock if links else VirtualClock()
+        if len(links) != hw.num_tiers - 1:
+            raise ValueError(
+                f"{hw.num_tiers} tiers need {hw.num_tiers - 1} links, "
+                f"got {len(links)}")
+        self.links = links
+        self.clock = clock
+        self.policy = policy
+        self.backend = backend
+        self.dtype = dtype
+        if microbatches is None:
+            microbatches = int(os.environ.get("REPRO_CHAIN_MICROBATCH",
+                                              plan.microbatches))
+        if microbatches < 1:
+            raise ValueError(
+                f"microbatches must be >= 1, got {microbatches}")
+        self.microbatches = microbatches
+        self.merge_fallback = merge_fallback
+        self.resplit_ratio = float(resplit_ratio)
+        self.estimators = chain_estimators(
+            [link.bandwidth for link in hw.links], alpha=estimator_alpha)
+        self.log = log if log is not None else EventLog()
+        self._jitter_rng = np.random.default_rng(jitter_seed)
+        self._cm = profile.cum_mem()
+        self._cf = profile.cum_flops()
+        # aggregate counters (the chaos harness reads these)
+        self.n_requests = 0
+        self.n_recovered = 0
+        self.n_merges = 0
+        self.n_repicks = 0
+        self.n_proactive = 0
+        n_hops = len(self.links)
+        self.hop_attempts = [0] * n_hops
+        self.hop_wire_bytes = [0] * n_hops
+        self.hop_goodput_bytes = [0] * n_hops
+        self.hop_merges = [0] * n_hops
+
+    # -- stages --------------------------------------------------------
+    def _run(self, x, start: int, stop: int):
+        return cnn_lib.apply_cnn(self.layers, self.params, x, start=start,
+                                 stop=stop, backend=self.backend,
+                                 dtype=self.dtype)
+
+    def _stage_seconds(self, tier_id: int, start: int, stop: int) -> float:
+        """Whole-batch compute seconds for layers [start, stop) on a tier
+        (the same cost model the planner priced the chain with)."""
+        tier = self.hw.tiers[tier_id]
+        mem = float(self._cm[stop] - self._cm[start])
+        fl = float(self._cf[stop] - self._cf[start])
+        return float(_tier_compute_time(tier, mem, fl, mem))
+
+    # -- degradation helpers -------------------------------------------
+    def _merge_ok(self, tier_id: int, start: int, merged_stop: int) -> bool:
+        if self.merge_fallback is not None:
+            return self.merge_fallback
+        mem = float(self._cm[merged_stop] - self._cm[start])
+        return mem <= self.hw.tiers[tier_id].memory_budget
+
+    def _bandwidths(self) -> list[float]:
+        return [est.bandwidth for est in self.estimators]
+
+    def _repick(self, exclude: tuple[tuple[int, ...], ...],
+                kind: str) -> ChainPlan | None:
+        try:
+            new = repick_chain(self.plan, self.profile, self.hw,
+                               bandwidths=self._bandwidths(),
+                               exclude=exclude)
+        except ValueError:
+            return None
+        if kind == ev.PROACTIVE_RESPLIT and new.cuts == self.plan.cuts:
+            return None                      # estimate agrees with plan
+        self.log.emit(kind, self.clock.now,
+                      old_cuts=list(self.plan.cuts),
+                      new_cuts=list(new.cuts),
+                      est_bandwidths=self._bandwidths(),
+                      degradation=max(est.degradation()
+                                      for est in self.estimators))
+        return new
+
+    def _maybe_proactive_repick(self) -> None:
+        if max(est.degradation() for est in self.estimators) \
+                < self.resplit_ratio:
+            return
+        new = self._repick(exclude=(), kind=ev.PROACTIVE_RESPLIT)
+        if new is not None:
+            self.plan = new
+            self.n_proactive += 1
+
+    # -- the request loop ----------------------------------------------
+    def infer(self, x) -> ChainInferenceResult:
+        """Run one request through the chain (or raise
+        SplitUnrecoverable).
+
+        Microbatches are processed in order against the per-tier /
+        per-link resource model -- valid because each microbatch only
+        waits on its own upstream ops and on earlier microbatches'
+        claims of the same resource (FIFO per tier/link), so m-major
+        traversal reproduces the chronological schedule.  Fault draws
+        happen per hop in microbatch order (deterministic per seed)."""
+        self.n_requests += 1
+        mark = len(self.log)
+        self._maybe_proactive_repick()
+        planned_cuts = self.plan.cuts
+        L = len(self.layers)
+        t0 = self.clock.now
+        batch = int(x.shape[0])
+        slices = microbatch_slices(batch, self.microbatches)
+        M = len(slices)
+
+        # Active chain structure, keyed to ORIGINAL tier/hop ids so the
+        # resource model and counters survive merges.
+        edges = list(self.plan.edges)
+        tiers = list(range(len(edges) - 1))
+        hops = list(range(len(edges) - 2))
+        tier_free = [t0] * self.hw.num_tiers
+        link_free = [t0] * len(self.links)
+
+        attempts = 0
+        retries = 0
+        wire = goodput = 0
+        merged: tuple[int, ...] = ()
+        tried: tuple[tuple[int, ...], ...] = ()
+        repicked = False
+        outs = []
+        finish = t0
+        for m in range(M):
+            x_m = x[slices[m][0]:slices[m][1]]
+            cur = x_m
+            layer = 0
+            s = 0
+            ready = t0
+            while True:
+                tier_id = tiers[s]
+                stop = edges[s + 1]
+                t_start = max(tier_free[tier_id], ready)
+                dt = self._stage_seconds(tier_id, layer, stop) / M
+                if stop > layer:
+                    cur = self._run(cur, layer, stop)
+                tier_free[tier_id] = t_start + dt
+                ready = t_start + dt
+                layer = stop
+                if layer == L:
+                    break
+                hop_id = hops[s]
+                data, host = SplitRuntime._serialize(cur)
+                tx = max(link_free[hop_id], ready)
+                try:
+                    out = send_with_retry(
+                        self.links[hop_id], data, self.policy,
+                        rng=self._jitter_rng, log=self.log,
+                        what=f"hop{hop_id}@l={layer}", at=tx)
+                    link_free[hop_id] = tx + out.elapsed_s
+                    ready = tx + out.elapsed_s
+                    attempts += out.attempts
+                    retries += out.attempts - 1
+                    wire += out.wire_bytes
+                    goodput += out.goodput_bytes
+                    self.hop_attempts[hop_id] += out.attempts
+                    self.hop_wire_bytes[hop_id] += out.wire_bytes
+                    self.hop_goodput_bytes[hop_id] += out.goodput_bytes
+                    self.estimators[hop_id].observe(out.goodput_bytes,
+                                                    out.success_elapsed_s)
+                    cur = SplitRuntime._deserialize(out.payload, host)
+                    s += 1
+                except TransferFailed as fail:
+                    t_fail = tx + fail.elapsed_s
+                    link_free[hop_id] = t_fail
+                    ready = t_fail
+                    attempts += fail.attempts
+                    retries += fail.attempts
+                    wire += fail.wire_bytes
+                    self.hop_attempts[hop_id] += fail.attempts
+                    self.hop_wire_bytes[hop_id] += fail.wire_bytes
+                    self.estimators[hop_id].observe(0.0, fail.elapsed_s)
+                    if self._merge_ok(tier_id, edges[s], edges[s + 2]):
+                        self.log.emit(ev.STAGE_MERGE, t_fail,
+                                      hop=hop_id, tier=tier_id,
+                                      cut=edges[s + 1],
+                                      merged_stop=edges[s + 2],
+                                      attempts=fail.attempts)
+                        self.n_merges += 1
+                        self.hop_merges[hop_id] += 1
+                        merged = merged + (hop_id,)
+                        del edges[s + 1]
+                        del tiers[s + 1]
+                        del hops[s]
+                        # stay on stage s: the loop's next pass computes
+                        # the folded layers [layer, new stop) on this tier
+                        continue
+                    tried = tried + (tuple(self.plan.cuts),)
+                    new = self._repick(exclude=tried, kind=ev.REPICK)
+                    if new is None:
+                        self.log.emit(ev.UNRECOVERABLE, t_fail,
+                                      tried=[list(c) for c in tried],
+                                      merged=list(merged))
+                        raise SplitUnrecoverable(
+                            f"hop {hop_id} failed; stage merge infeasible "
+                            f"and chain Pareto front exhausted "
+                            f"(tried {list(tried)})") from fail
+                    self.plan = new
+                    self.n_repicks += 1
+                    repicked = True
+                    # restart this microbatch from tier 0 on the new cuts
+                    edges = list(new.edges)
+                    tiers = list(range(len(edges) - 1))
+                    hops = list(range(len(edges) - 2))
+                    cur = x_m
+                    layer = 0
+                    s = 0
+                    ready = t_fail
+            outs.append(cur)
+            finish = max(finish, ready)
+        self.clock.advance_to(finish)
+        logits = outs[0] if M == 1 else jnp.concatenate(outs, axis=0)
+        degraded = bool(merged) or repicked
+        if degraded or retries:
+            self.n_recovered += 1
+        return ChainInferenceResult(
+            logits=logits, cuts=tuple(edges[1:-1]),
+            planned_cuts=planned_cuts, degraded=degraded,
+            merged_hops=merged, attempts=attempts,
+            chain_elapsed_s=finish - t0, wire_bytes=wire,
+            goodput_bytes=goodput, microbatches=M,
+            events=tuple(self.log.since(mark)))
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate counters + per-hop counters + event histogram."""
+        return {
+            "requests": self.n_requests,
+            "recovered": self.n_recovered,
+            "merges": self.n_merges,
+            "repicks": self.n_repicks,
+            "proactive_resplits": self.n_proactive,
+            "active_cuts": list(self.plan.cuts),
+            "microbatches": self.microbatches,
+            "hops": [{
+                "hop": k,
+                "attempts": self.hop_attempts[k],
+                "wire_bytes": self.hop_wire_bytes[k],
+                "goodput_bytes": self.hop_goodput_bytes[k],
+                "retransmitted_bytes": (self.hop_wire_bytes[k]
+                                        - self.hop_goodput_bytes[k]),
+                "merges": self.hop_merges[k],
+                "est_bandwidth": self.estimators[k].bandwidth,
+                "degradation": self.estimators[k].degradation(),
+                "link": self.links[k].counters(),
+            } for k in range(len(self.links))],
             "events": self.log.counts(),
         }

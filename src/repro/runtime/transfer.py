@@ -17,13 +17,16 @@ import zlib
 
 import numpy as np
 
+from repro.core.costs import FRAME_HEADER_BYTES
 from repro.runtime import events as ev
 from repro.runtime.events import EventLog
 from repro.runtime.faults import (ENV_PREFIX, FaultyLink, LinkDropped,
                                   LinkError, LinkOutage, LinkTimeout)
 
 # Framing overhead per wire attempt: crc32 (4B) + payload length (4B).
-HEADER_BYTES = 8
+# The cost model prices the same constant (costs.FRAME_HEADER_BYTES) in
+# the microbatch pipeline terms -- one source of truth.
+HEADER_BYTES = FRAME_HEADER_BYTES
 
 
 class ChecksumError(LinkError):
@@ -114,45 +117,60 @@ def send_with_retry(link: FaultyLink, payload: bytes,
                     policy: RetryPolicy = RetryPolicy(), *,
                     rng: np.random.Generator | None = None,
                     log: EventLog | None = None,
-                    what: str = "boundary") -> TransferOutcome:
+                    what: str = "boundary",
+                    at: float | None = None) -> TransferOutcome:
     """Deliver ``payload`` over ``link`` or raise ``TransferFailed``.
 
     rng: seeded generator for backoff jitter (None = no jitter).
     log: optional ``EventLog``; every attempt/failure/backoff is emitted.
-    what: label carried on the events (e.g. "boundary", "logits")."""
+    what: label carried on the events (e.g. "boundary", "logits").
+    at: explicit virtual start time for the transfer.  ``None`` (the
+      two-tier path) starts at the link clock and spends backoff waits on
+      it directly -- exactly the historical behaviour.  The chain runtime
+      passes its pipeline-scheduled send time: the retry loop then keeps
+      a local time cursor (the shared clock only ratchets forward via
+      ``send_at``), so concurrent hops don't steal each other's time."""
     log = log if log is not None else EventLog()
     crc = zlib.crc32(payload)
     size = len(payload) + HEADER_BYTES
-    t_start = link.clock
+    scheduled = at is not None
+    t = float(at) if scheduled else link.clock
+    t_start = t
     wire_bytes = 0
     for attempt in range(1, policy.max_attempts + 1):
-        log.emit(ev.ATTEMPT, link.clock, what=what, attempt=attempt,
-                 nbytes=size)
+        log.emit(ev.ATTEMPT, t, what=what, attempt=attempt, nbytes=size)
         wire_bytes += size
         try:
-            delivered, elapsed = link.send(payload, policy.timeout_s)
+            if scheduled:
+                delivered, elapsed = link.send_at(t, payload,
+                                                  policy.timeout_s)
+            else:
+                delivered, elapsed = link.send(payload, policy.timeout_s)
             if zlib.crc32(delivered) != crc:
                 raise ChecksumError(
                     f"crc32 mismatch on attempt {attempt}", elapsed)
-            log.emit(ev.TRANSFER_OK, link.clock, what=what,
+            t += elapsed
+            log.emit(ev.TRANSFER_OK, t, what=what,
                      attempt=attempt, elapsed_s=elapsed)
             return TransferOutcome(
                 payload=delivered, attempts=attempt,
-                elapsed_s=link.clock - t_start, success_elapsed_s=elapsed,
+                elapsed_s=t - t_start, success_elapsed_s=elapsed,
                 wire_bytes=wire_bytes, goodput_bytes=size)
         except LinkError as e:
-            log.emit(_FAIL_KINDS[type(e)], link.clock, what=what,
+            t += e.elapsed_s
+            log.emit(_FAIL_KINDS[type(e)], t, what=what,
                      attempt=attempt, elapsed_s=e.elapsed_s)
             if attempt == policy.max_attempts:
-                log.emit(ev.GIVE_UP, link.clock, what=what,
-                         attempts=attempt)
+                log.emit(ev.GIVE_UP, t, what=what, attempts=attempt)
                 raise TransferFailed(
                     f"{what}: {attempt} attempts exhausted ({e})",
-                    attempts=attempt, elapsed_s=link.clock - t_start,
+                    attempts=attempt, elapsed_s=t - t_start,
                     wire_bytes=wire_bytes) from e
             u = float(rng.uniform()) if rng is not None else 0.0
             wait = policy.backoff_s(attempt, u)
-            link.advance(wait)
-            log.emit(ev.BACKOFF, link.clock, what=what, attempt=attempt,
+            if not scheduled:
+                link.advance(wait)
+            t += wait
+            log.emit(ev.BACKOFF, t, what=what, attempt=attempt,
                      wait_s=wait)
     raise AssertionError("unreachable")  # pragma: no cover

@@ -1,0 +1,226 @@
+"""The unified ChainPlan stack: construction validation, K=2 degeneracy
+against the paper's two-tier planner, pipeline-latency pricing, and the
+generalised (per-hop) re-pick machinery."""
+import numpy as np
+import pytest
+
+from repro.core import (PAPER_ENV_J6, ChainHardware, ChainPlan,
+                        MultiCutPlan, SplitPlan,
+                        chain_link_weights, chain_of,
+                        chain_stage_hop_times, evaluate_chain_objectives,
+                        evaluate_multicut, link_weights, paper_chain,
+                        pipeline_latency, repick_chain, repick_split,
+                        smartsplit, smartsplit_chain, smartsplit_exhaustive)
+from repro.models.cnn import avgpool, conv, linear, maxpool, relu
+from repro.models.profiles import cnn_profile
+
+TINY_LAYERS = [conv(8, 3, 1, 1), relu(), maxpool(2, 2),
+               conv(16, 3, 1, 1), relu(), avgpool(2), linear(10)]
+TINY_SHAPE = (3, 16, 16)
+
+
+def _tiny_profile(**kw):
+    return cnn_profile("tiny", in_shape=TINY_SHAPE, layers=TINY_LAYERS,
+                       **kw)
+
+
+def _plan(cuts, L=10, tiers=None, links=None, **kw):
+    K = len(cuts) + 1
+    hw = paper_chain(3)
+    tiers = tiers if tiers is not None else tuple(
+        f"t{i}" for i in range(K))
+    links = links if links is not None else tuple(
+        [hw.links[0]] * (len(tiers) - 1))
+    return ChainPlan(model="m", num_layers=L, cuts=tuple(cuts),
+                     objectives=(1.0, 2.0, 3.0),
+                     pareto_cuts=np.asarray([cuts], np.int64),
+                     pareto_F=np.ones((1, 3)),
+                     links=links, tiers=tiers, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Validation (satellite: named ValueErrors on malformed plans/chains)
+# ---------------------------------------------------------------------------
+def test_chain_plan_rejects_out_of_range_cut():
+    with pytest.raises(ValueError, match="out of range"):
+        _plan((0, 5))
+    with pytest.raises(ValueError, match="out of range"):
+        _plan((3, 10), L=10)
+
+
+def test_chain_plan_rejects_non_increasing_cuts():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        _plan((5, 5))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        _plan((6, 3))
+
+
+def test_chain_plan_rejects_tier_and_link_mismatch():
+    with pytest.raises(ValueError, match="tier/cut mismatch"):
+        _plan((3, 6), tiers=("a", "b"))
+    hw = paper_chain(3)
+    with pytest.raises(ValueError, match="tier/link mismatch"):
+        _plan((3, 6), links=(hw.links[0],))
+    with pytest.raises(ValueError, match="microbatches"):
+        _plan((3,), tiers=("a", "b"), microbatches=0)
+
+
+def test_chain_hardware_validation():
+    hw = paper_chain(3)
+    with pytest.raises(ValueError, match=">= 2 tiers"):
+        ChainHardware(tiers=(hw.tiers[0],), links=())
+    with pytest.raises(ValueError, match="tier/link mismatch"):
+        ChainHardware(tiers=hw.tiers, links=(hw.links[0],))
+    with pytest.raises(ValueError, match="per-hop bandwidths"):
+        hw.with_link_bandwidths((1e6,))
+
+
+def test_chain_plan_views_and_merge_hop():
+    p = _plan((3, 6), L=10)
+    assert p.num_tiers == 3
+    assert p.edges == (0, 3, 6, 10)
+    assert p.stages() == [(0, 3), (3, 6), (6, 10)]
+    assert p.stages(10) == p.stages()
+    with pytest.raises(ValueError, match="disagrees"):
+        p.stages(9)
+    m = p.merge_hop(1)         # stage 2 folds onto stage 1's tier
+    assert m.cuts == (3,)
+    assert m.tiers == ("t0", "t1")
+    assert len(m.links) == 1
+    assert m.pareto_cuts.shape == (0, 1)   # cached front not carried
+    with pytest.raises(ValueError, match="merge_hop"):
+        p.merge_hop(2)
+    # K=3 plans have no single split index
+    with pytest.raises(ValueError, match="two-tier view"):
+        _ = p.split_index
+
+
+def test_legacy_aliases_are_chain_plan():
+    assert SplitPlan is ChainPlan
+    assert MultiCutPlan is ChainPlan
+
+
+# ---------------------------------------------------------------------------
+# K=2 degeneracy: the unified planner IS the paper planner
+# ---------------------------------------------------------------------------
+def test_two_tier_chain_plan_matches_smartsplit_exactly():
+    p = _tiny_profile()
+    legacy = smartsplit_exhaustive(p, PAPER_ENV_J6)
+    chain = smartsplit_chain(p, PAPER_ENV_J6)   # TwoTierHardware accepted
+    assert chain.cuts == (legacy.split_index,)
+    assert chain.split_index == legacy.split_index
+    assert chain.objectives == legacy.objectives        # bitwise
+    assert chain.pareto_indices == legacy.pareto_indices
+    np.testing.assert_array_equal(chain.pareto_F, legacy.pareto_F)
+    assert chain.hardware == legacy.hardware
+    assert chain.client_layers + chain.server_layers == p.num_layers
+
+
+def test_two_tier_chain_matches_nsga2_smartsplit_pick():
+    p = _tiny_profile()
+    ga = smartsplit(p, PAPER_ENV_J6)
+    chain = smartsplit_chain(p, PAPER_ENV_J6)
+    # both TOPSIS-pick from the same exhaustive front on 7 layers
+    assert chain.split_index == ga.split_index
+    np.testing.assert_allclose(chain.objectives, ga.objectives,
+                               rtol=1e-12)
+
+
+def test_repick_chain_matches_repick_split_at_k2():
+    p = _tiny_profile()
+    plan = smartsplit_exhaustive(p, PAPER_ENV_J6)
+    B = PAPER_ENV_J6.link.bandwidth
+    legacy = repick_split(plan, p, PAPER_ENV_J6, bandwidth=B / 4)
+    chain = repick_chain(plan, p, PAPER_ENV_J6, bandwidths=(B / 4,))
+    assert chain.cuts == (legacy.split_index,)
+    np.testing.assert_allclose(chain.objectives, legacy.objectives,
+                               rtol=1e-12)
+
+
+def test_repick_chain_exclusion_and_empty_front():
+    p = _tiny_profile()
+    plan = smartsplit_exhaustive(p, PAPER_ENV_J6)
+    repicked = repick_chain(plan, p, PAPER_ENV_J6,
+                            exclude=(plan.cuts,))
+    assert repicked.cuts != plan.cuts           # tried cut skipped
+    all_cuts = tuple(tuple(int(c) for c in row)
+                     for row in plan.pareto_cuts)
+    with pytest.raises(ValueError):
+        repick_chain(plan, p, PAPER_ENV_J6, exclude=all_cuts)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline latency pricing
+# ---------------------------------------------------------------------------
+def test_pipeline_latency_m1_is_sequential_sum():
+    stage_T = np.array([[0.3, 0.2, 0.5]])
+    hop_T = np.array([[0.1, 0.4]])
+    lat = pipeline_latency(stage_T, hop_T, microbatches=1)
+    np.testing.assert_allclose(lat, [1.5])
+    # M large: bounded below by the slowest unit, above by the M=1 sum
+    lat8 = pipeline_latency(stage_T, hop_T, microbatches=8)
+    assert 0.5 <= lat8[0] <= 1.5
+    assert lat8[0] < lat[0]
+
+
+def test_pipeline_latency_headers_penalise_microbatching():
+    stage_T = np.array([[0.5, 0.5]])
+    hop_T = np.array([[0.5]])
+    bw = np.array([1000.0])
+    m1 = pipeline_latency(stage_T, hop_T, 1, link_bandwidths=bw)
+    m4 = pipeline_latency(stage_T, hop_T, 4, link_bandwidths=bw)
+    # framing overhead exists but is small vs the pipelining win
+    assert m4[0] < m1[0]
+    m4_free = pipeline_latency(stage_T, hop_T, 4)
+    assert m4[0] > m4_free[0]
+
+
+def test_evaluate_multicut_microbatching_reduces_latency():
+    p = _tiny_profile()
+    hw = paper_chain(3)
+    genomes = np.array([[2, 5], [3, 6]], np.int64)
+    F1 = evaluate_multicut(p, hw, genomes)
+    F4 = evaluate_multicut(p, hw, genomes, microbatches=4)
+    # pipelining wins where units overlap (framing overhead can eat the
+    # gain when one unit dominates, so assert the balanced cut improves)
+    assert F4[0, 0] < F1[0, 0]
+    np.testing.assert_array_equal(F1[:, 2], F4[:, 2])   # memory unchanged
+    # both evaluators share the pipeline latency model at M=1 (f2/f3 use
+    # different normalisations: billed Joules vs peak-mem fraction)
+    np.testing.assert_allclose(
+        F1[:, 0], evaluate_chain_objectives(p, hw, genomes)[:, 0],
+        rtol=1e-12)
+
+
+def test_chain_stage_hop_times_shapes():
+    p = _tiny_profile()
+    hw = paper_chain(4)
+    genomes = np.array([[1, 3, 5]], np.int64)
+    stage_T, hop_T = chain_stage_hop_times(p, hw, genomes)
+    assert stage_T.shape == (1, 4)
+    assert hop_T.shape == (1, 3)
+    assert (stage_T > 0).all() and (hop_T > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-hop degradation weighting
+# ---------------------------------------------------------------------------
+def test_chain_link_weights_degenerates_to_link_weights():
+    np.testing.assert_array_equal(chain_link_weights((3.0,)),
+                                  link_weights(3.0))
+    # worst hop drives the chain weighting
+    np.testing.assert_array_equal(chain_link_weights((1.0, 5.0, 2.0)),
+                                  link_weights(5.0))
+    with pytest.raises(ValueError):
+        chain_link_weights(())
+
+
+def test_paper_chain_shapes():
+    for K in (2, 3, 4):
+        hw = paper_chain(K)
+        assert hw.num_tiers == K
+        assert len(hw.links) == K - 1
+        assert hw.tiers[0].name == "samsung-galaxy-j6"
+    assert chain_of(PAPER_ENV_J6).num_tiers == 2
+    with pytest.raises(ValueError):
+        paper_chain(5)
