@@ -1,0 +1,166 @@
+"""Quantized boundary streaming bench: fp32/bf16/int8 wire formats over
+the paper CNNs.
+
+Two halves per model:
+
+* **modelled** (always the paper's 224 px shapes, batch 1): per-split
+  wire bytes under each format (``ModelProfile.wire_boundary`` -- int8 =
+  payload + fp32 per-channel scales + multipart framing), the resulting
+  upload latency/energy deltas on the paper's J6 environment, and where
+  NSGA-II/TOPSIS moves the split when it prices each wire format
+  (``smartsplit(wire=...)``).
+* **executed** (96 px in smoke so CI finishes in seconds, 224 px full):
+  ``apply_split(wire=...)`` end to end at the int8-planned split --
+  top-1 agreement and max-abs logits error against the fp32 wire, plus
+  the fused quantize kernel's wall time on the real boundary activation.
+
+Headline artifact: ``benchmarks/out/BENCH_boundary_quant{_smoke}.json``
+with the min int8-vs-fp32 wire-bytes reduction across every paper split
+(the >= 3.5x acceptance series).
+
+CLI: ``python -m benchmarks.boundary_quant_bench [--smoke]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, time_us
+from repro.core import PAPER_ENV_J6, latency_terms, smartsplit, total_energy
+from repro.kernels.quant import quantize_boundary
+from repro.models import cnn as cnn_lib
+from repro.models.profiles import cnn_profile
+
+MODELS = ("alexnet", "vgg16", "mobilenetv2")
+WIRES = ("fp32", "bf16", "int8")
+
+
+def modelled_section(model: str) -> dict:
+    """Wire-byte / objective / split-movement model at the paper shapes."""
+    hw = PAPER_ENV_J6
+    prof = cnn_profile(model)           # 224 px, batch 1, fp32 storage
+    wb = {w: prof.wire_boundary(w) for w in WIRES}
+    live = wb["fp32"] > 0               # splits with a non-empty boundary
+    reduction = wb["fp32"][live] / wb["int8"][live]
+    out = {
+        "model": model,
+        "num_splits": int(live.sum()),
+        "min_int8_reduction": float(reduction.min()),
+        "mean_int8_reduction": float(reduction.mean()),
+        "wire": {},
+        "splits": {},
+    }
+    t_up_fp32 = latency_terms(prof, hw, wire="fp32")[1]
+    en_fp32 = total_energy(prof, hw, wire="fp32")
+    l_fp32 = smartsplit(prof, hw, wire="fp32").split_index
+    for w in WIRES:
+        plan = smartsplit(prof, hw, wire=w)
+        l1 = plan.split_index
+        lat, en, mem = plan.objectives
+        t_up = latency_terms(prof, hw, wire=w)[1]
+        out["splits"][w] = l1
+        out["wire"][w] = {
+            "split_index": l1,
+            "latency_s": float(lat), "energy_j": float(en),
+            "client_mem_bytes": float(mem),
+            "boundary_wire_bytes": float(wb[w][l1]),
+            "upload_s": float(t_up[l1]),
+            # deltas at the fp32-planned split: same placement, new wire
+            "upload_delta_s_at_fp32_split":
+                float(t_up[l_fp32] - t_up_fp32[l_fp32]),
+            "energy_delta_j_at_fp32_split":
+                float(total_energy(prof, hw, wire=w)[l_fp32]
+                      - en_fp32[l_fp32]),
+        }
+    return out
+
+
+def executed_section(model: str, in_shape: tuple, batch: int = 2) -> dict:
+    """End-to-end ``apply_split(wire=...)`` accuracy + quantize timing."""
+    hw = PAPER_ENV_J6
+    prof = cnn_profile(model, in_shape=in_shape)
+    plan = smartsplit(prof, hw, wire="int8")
+    l1 = plan.split_index
+    layers = cnn_lib.CNN_MODELS[model]
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), layers, in_shape)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch,) + in_shape), jnp.float32)
+    ref, boundary = cnn_lib.apply_split(layers, params, x, l1, wire="fp32")
+    ref_top1 = np.asarray(jnp.argmax(ref, axis=-1))
+    us_q = time_us(lambda: jax.block_until_ready(
+        quantize_boundary(boundary)), repeats=3)
+    out = {"model": model, "in_shape": list(in_shape), "batch": batch,
+           "split_index": l1,
+           "boundary_shape": [int(d) for d in boundary.shape],
+           "quantize_us": us_q, "wire": {}}
+    for w in WIRES:
+        logits, _ = cnn_lib.apply_split(layers, params, x, l1, wire=w)
+        top1 = np.asarray(jnp.argmax(logits, axis=-1))
+        out["wire"][w] = {
+            "top1_agreement": float(np.mean(top1 == ref_top1)),
+            "max_abs_err": float(jnp.max(jnp.abs(logits - ref))),
+        }
+    return out
+
+
+def run_all(smoke: bool = False) -> list[tuple]:
+    """Bench-contract entry: returns ``(name, us, derived)`` rows and
+    writes BENCH_boundary_quant{_smoke}.json."""
+    exec_shape = (3, 96, 96) if smoke else cnn_lib.INPUT_SHAPE
+    rows, models = [], {}
+    for model in MODELS:
+        m = modelled_section(model)
+        m["executed"] = executed_section(model, exec_shape)
+        models[model] = m
+        i8 = m["wire"]["int8"]
+        e8 = m["executed"]["wire"]["int8"]
+        rows.append((
+            f"boundary_quant/{model}.int8",
+            m["executed"]["quantize_us"],
+            f"min_reduction={m['min_int8_reduction']:.2f}x"
+            f" split={m['splits']['fp32']}->{m['splits']['int8']}"
+            f" upload_delta={i8['upload_delta_s_at_fp32_split']:.2e}s"
+            f" top1_agree={e8['top1_agreement']:.3f}"
+            f" max_abs_err={e8['max_abs_err']:.3e}"))
+    totals = {
+        "min_int8_reduction": min(m["min_int8_reduction"]
+                                  for m in models.values()),
+        "min_top1_agreement_int8": min(
+            m["executed"]["wire"]["int8"]["top1_agreement"]
+            for m in models.values()),
+        "max_abs_err_int8": max(
+            m["executed"]["wire"]["int8"]["max_abs_err"]
+            for m in models.values()),
+        "split_moves_int8": sum(
+            m["splits"]["int8"] != m["splits"]["fp32"]
+            for m in models.values()),
+    }
+    name = "BENCH_boundary_quant_smoke.json" if smoke \
+        else "BENCH_boundary_quant.json"
+    path = save_json("", name, {
+        "bench": "boundary_quant", "smoke": smoke,
+        "hardware": "paper-j6", "modelled_in_shape": list(cnn_lib.INPUT_SHAPE),
+        "executed_in_shape": list(exec_shape),
+        "models": models, "totals": totals})
+    rows.append((
+        f"boundary_quant/totals[{len(models)}models]", None,
+        f"min_reduction={totals['min_int8_reduction']:.2f}x"
+        f" min_top1={totals['min_top1_agreement_int8']:.3f}"
+        f" split_moves={totals['split_moves_int8']} -> {path}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    emit([], header=True)
+    emit(run_all(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import ensure_out, save_json, time_us
+from repro.core.costs import INT8_FRAME_OVERHEAD_BYTES, WIRE_SCALE_BYTES
 from repro.core.hardware import V5E_PEAK_FLOPS_BF16
 from repro.kernels import conv2d as conv2d_mod
 from repro.kernels import ops, ref
@@ -209,6 +210,12 @@ def dtype_sweep_report(smoke: bool = False) -> list[tuple]:
             us[policy] = time_us(run, repeats=repeats, warmup=0)
             err[policy] = float(jnp.max(jnp.abs(got - want)))
         denom = float(jnp.max(jnp.abs(want)))
+        # wire column: this activation shipped as the split boundary --
+        # int8 = 1 byte/elem + per-channel fp32 scales + two-part framing
+        out_elems = stats["fp32"]["out_bytes"] // 4
+        wire_fp32 = stats["fp32"]["out_bytes"]
+        wire_int8 = out_elems + WIRE_SCALE_BYTES * cout \
+            + INT8_FRAME_OVERHEAD_BYTES
         entries.append({
             "name": name,
             "shape": {"cin": cin, "hw": hw, "cout": cout, "K": K,
@@ -219,6 +226,9 @@ def dtype_sweep_report(smoke: bool = False) -> list[tuple]:
             "max_abs_err_fp32": err["fp32"],
             "max_abs_err_bf16": err["bf16"],
             "max_rel_err_bf16": err["bf16"] / denom if denom else 0.0,
+            "wire_bytes_fp32": wire_fp32,
+            "wire_bytes_int8": wire_int8,
+            "wire_int8_reduction": wire_fp32 / wire_int8,
         })
         rows.append((
             f"kernels.dtype_sweep.{name}", us["bf16"],
@@ -241,6 +251,10 @@ def dtype_sweep_report(smoke: bool = False) -> list[tuple]:
                 e["vmem_per_tile_ratio"] for e in entries),
             "max_abs_err_bf16": max(
                 e["max_abs_err_bf16"] for e in entries),
+            "wire_bytes_fp32": sum(e["wire_bytes_fp32"] for e in entries),
+            "wire_bytes_int8": sum(e["wire_bytes_int8"] for e in entries),
+            "min_wire_int8_reduction": min(
+                e["wire_int8_reduction"] for e in entries),
         }})
     rows.append(("kernels.dtype_sweep.json", None, path))
     return rows
@@ -446,6 +460,9 @@ def kernel_summary_report(smoke: bool = False) -> list[tuple]:
                 [e["search_fp32"]["vmem_bytes"] for e in tiling["wide"]]
         sec["max_vmem_bytes_per_tile"] = max(vmems, default=0)
         summary["sections"]["tiling_search"] = sec
+    quant = load(f"BENCH_boundary_quant{sfx}.json")
+    if quant:
+        summary["sections"]["boundary_quant"] = dict(quant["totals"])
     head = {}
     ts = summary["sections"].get("tiling_search", {})
     if ts:
@@ -454,6 +471,14 @@ def kernel_summary_report(smoke: bool = False) -> list[tuple]:
         head["total_launches_search_bf16"] = ts.get("launches_search_bf16")
         head["max_vmem_bytes_per_tile"] = ts.get("max_vmem_bytes_per_tile")
         head["wide_shapes_unlocked"] = ts.get("wide_greedy_rejected")
+    ds = summary["sections"].get("dtype_sweep", {})
+    if "wire_bytes_int8" in ds:
+        head["wire_bytes_fp32"] = ds["wire_bytes_fp32"]
+        head["wire_bytes_int8"] = ds["wire_bytes_int8"]
+    bq = summary["sections"].get("boundary_quant", {})
+    if bq:
+        head["min_boundary_int8_reduction"] = bq.get("min_int8_reduction")
+        head["min_top1_agreement_int8"] = bq.get("min_top1_agreement_int8")
     summary["headline"] = head
     path = save_json("", f"BENCH_kernel_summary{sfx}.json", summary)
     return [("kernels.summary.json", None, path)]
@@ -470,6 +495,14 @@ def run_smoke() -> list[tuple]:
 
     # wide-input column tiling (one shape per conv family, tiny budget)
     rows += tiling_search_report(smoke=True)
+
+    # boundary quantize: one AlexNet-pool5-sized activation
+    from repro.kernels.quant import quantize_boundary
+    xq = jax.random.normal(key, (1, 256, 6, 6), jnp.float32)
+    us = time_us(lambda: jax.block_until_ready(quantize_boundary(xq)),
+                 repeats=1)
+    rows.append(("kernels.smoke.quantize_boundary.256x6x6", us,
+                 "per-channel int8 + fp32 scales"))
 
     # flash attention: one 128-token tile pair
     B, S, H, KV, hd = 1, 128, 2, 1, 64
@@ -600,6 +633,17 @@ def run_all(smoke: bool = False) -> list[tuple]:
 
     # greedy-vs-search tiling + wide-input sweep + BENCH_tiling_search
     rows += tiling_search_report()
+
+    # boundary quantize at the paper splits: AlexNet pool5 (flat
+    # scale-heavy boundary) and VGG16 pool4 (bulk 512-channel map)
+    from repro.kernels.quant import quantize_boundary
+    for qname, qshape in (("alexnet_pool5", (1, 256, 6, 6)),
+                          ("vgg16_pool4", (1, 512, 28, 28))):
+        xq = jax.random.normal(key, qshape, jnp.float32)
+        us = time_us(lambda: jax.block_until_ready(quantize_boundary(xq)),
+                     repeats=3)
+        rows.append((f"kernels.quantize_boundary.{qname}", us,
+                     "per-channel int8 + fp32 scales"))
 
     # rwkv6 wkv: 64 tokens x 2 heads
     b, t, h, hd2 = 1, 64, 2, 64

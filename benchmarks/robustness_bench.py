@@ -28,6 +28,7 @@ from repro.models import cnn as cnn_lib
 from repro.models.profiles import cnn_profile
 from repro.runtime import (ChainRuntime, FaultSpec, FaultyLink, RetryPolicy,
                            SplitRuntime, VirtualClock, microbatch_slices)
+from repro.runtime.events import CHECKSUM_FAIL
 
 MODELS = ("alexnet", "vgg16", "mobilenetv2")
 SMOKE_MODELS = ("alexnet", "mobilenetv2")
@@ -113,6 +114,92 @@ def run_cell(model: str, dtype: str, profile_name: str, spec: FaultSpec,
                    "outages": list(spec.outages)},
         "seeds": list(seeds),
     }
+
+
+# --------------------------------------------------------------------------
+# Quantized-wire cells: corrupt-frame faults against int8 boundary payloads
+# --------------------------------------------------------------------------
+
+# Every third attempt (on average) delivers a flipped byte somewhere in the
+# framed (scales, data) payload; the per-part crc32s must catch it, name
+# the frame it hit, and the retry ladder must recover every request.
+QUANT_FAULTS = FaultSpec(corrupt_rate=0.35)
+
+
+def run_quant_cell(model: str, profile_name: str, spec: FaultSpec,
+                   seeds: tuple[int, ...], in_shape: tuple, requests: int,
+                   params, x, policy: RetryPolicy = POLICY) -> dict:
+    """One int8-wire (model, corrupt-profile) cell across link seeds.
+
+    The fault-free reference is ``apply_split(wire="int8")`` -- the same
+    quantize/dequantize math the runtime codec performs -- so undegraded
+    requests must match it bit-for-bit even while corrupted attempts are
+    being caught and retried."""
+    hw = PAPER_ENV_J6
+    prof = cnn_profile(model, in_shape=in_shape)
+    plan = smartsplit_exhaustive(prof, hw, wire="int8")
+    layers = cnn_lib.CNN_MODELS[model]
+    ref_logits, _ = cnn_lib.apply_split(layers, params, x,
+                                        plan.split_index, wire="int8")
+    ref_np = np.asarray(ref_logits)
+    completed = total = 0
+    bit_identical = True
+    part_hits = {"scales": 0, "data": 0, "header": 0}
+    agg = {"recovered": 0, "fallback_device": 0, "repicks": 0,
+           "attempts": 0, "retransmitted_bytes": 0, "wire_bytes": 0,
+           "raw_bytes": 0}
+    for seed in seeds:
+        link = FaultyLink(hw.link.bandwidth, faults=spec, seed=seed)
+        rt = SplitRuntime(model, params, plan, prof, hw, link=link,
+                          wire="int8", policy=policy, jitter_seed=seed)
+        for _ in range(requests):
+            total += 1
+            r = rt.infer(x)
+            jax.block_until_ready(r.logits)
+            completed += 1
+            agg["attempts"] += r.attempts
+            agg["retransmitted_bytes"] += r.retransmitted_bytes
+            agg["wire_bytes"] += r.wire_bytes
+            if not r.degraded:
+                bit_identical &= bool(
+                    np.array_equal(np.asarray(r.logits), ref_np))
+        for e in rt.log.events:
+            if e.kind == CHECKSUM_FAIL:
+                part_hits[e.detail.get("part", "header")] += 1
+        s = rt.stats()
+        for k in ("recovered", "fallback_device", "repicks"):
+            agg[k] += s[k]
+        agg["raw_bytes"] += s["hops"][0]["raw_bytes"]
+    goodput = agg["wire_bytes"] - agg["retransmitted_bytes"]
+    return {
+        "model": model, "wire": "int8", "profile": profile_name,
+        "split_index": plan.split_index,
+        "requests": total,
+        "completed": completed,
+        "success_rate": completed / total,
+        "bit_identical_when_undegraded": bit_identical,
+        "corrupt_frame_hits": part_hits,
+        "wire_reduction_vs_raw": agg["raw_bytes"] / goodput
+        if goodput else 0.0,
+        **agg,
+        "faults": {"corrupt_rate": spec.corrupt_rate},
+        "seeds": list(seeds),
+    }
+
+
+def quant_sweep(*, models=MODELS, seeds=(0,),
+                in_shape=cnn_lib.INPUT_SHAPE, requests: int = 6,
+                policy: RetryPolicy = POLICY) -> list[dict]:
+    cells = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1,) + in_shape), jnp.float32)
+    for model in models:
+        params = cnn_lib.init_cnn(jax.random.PRNGKey(0),
+                                  cnn_lib.CNN_MODELS[model], in_shape)
+        cells.append(run_quant_cell(model, "quant_corrupt35", QUANT_FAULTS,
+                                    tuple(seeds), in_shape, requests,
+                                    params, x, policy=policy))
+    return cells
 
 
 # --------------------------------------------------------------------------
@@ -275,16 +362,20 @@ def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
                      policy=POLICY_SMOKE)
         chain = dict(configs=CHAIN_CONFIGS_SMOKE, seeds=tuple(seeds),
                      policy=POLICY_SMOKE)
+        quant = dict(models=SMOKE_MODELS, in_shape=(3, 96, 96),
+                     requests=4, seeds=tuple(seeds), policy=POLICY_SMOKE)
     else:
         seeds = seeds if seeds is not None else (0,)
         sweep = dict(models=MODELS, requests=6, seeds=tuple(seeds))
         chain = dict(configs=CHAIN_CONFIGS, seeds=tuple(seeds))
+        quant = dict(models=MODELS, requests=6, seeds=tuple(seeds))
 
     report = {}
 
     def build():
         report["out"] = chaos_sweep(**sweep)
         report["out"]["chain_cells"] = chain_sweep(**chain)
+        report["out"]["quant_cells"] = quant_sweep(**quant)
 
     us = time_us(build, repeats=1, warmup=0)
     out = report["out"]
@@ -315,7 +406,15 @@ def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
             f"robustness/chain{c['num_tiers']}.{c['model']}.{c['dtype']}"
             f".{c['profile']}",
             round(lat_hi * 1e6, 1), derived))
-    all_cells = out["cells"] + out["chain_cells"]
+    for c in out["quant_cells"]:
+        hits = c["corrupt_frame_hits"]
+        rows.append((
+            f"robustness/quant.{c['model']}.{c['profile']}", None,
+            f"success={c['success_rate']:.2f}"
+            f" bitid={c['bit_identical_when_undegraded']}"
+            f" frame_hits=scales:{hits['scales']}/data:{hits['data']}"
+            f" wire_reduction={c['wire_reduction_vs_raw']:.2f}x"))
+    all_cells = out["cells"] + out["chain_cells"] + out["quant_cells"]
     n_ok = sum(c["success_rate"] == 1.0 for c in all_cells)
     rows.append((f"robustness/sweep[{len(all_cells)}cells]",
                  round(us, 1),

@@ -52,6 +52,11 @@ def main() -> None:
         sections["robustness"] = robustness_bench.run_all
     except ImportError:
         pass
+    try:
+        from benchmarks import boundary_quant_bench
+        sections["boundary_quant"] = boundary_quant_bench.run_all
+    except ImportError:
+        pass
 
     emit([], header=True)
     ran = []

@@ -2,14 +2,20 @@
 paper's competing baselines."""
 from repro.core.baselines import ALGORITHMS, coc, cos, ebo, lbo, mbo, rs
 from repro.core.chainplan import ChainPlan, MultiCutPlan, SplitPlan
-from repro.core.costs import (FRAME_HEADER_BYTES, LayerProfile, ModelProfile,
+from repro.core.costs import (FRAME_HEADER_BYTES, INT8_FRAME_OVERHEAD_BYTES,
+                              MULTIPART_BASE_BYTES, PART_HEADER_BYTES,
+                              WIRE_SCALE_BYTES, LayerProfile, ModelProfile,
                               chain_feasible_mask, chain_stage_hop_times,
-                              client_memory, energy_terms,
-                              evaluate_chain_objectives, evaluate_objectives,
-                              feasible_mask, latency_terms, pipeline_latency,
-                              total_energy, total_latency)
-from repro.core.dtype_policy import (CONV_DTYPES, conv_dtype, dtype_bytes,
-                                     policy_jnp_dtype)
+                              client_memory, download_wire_bytes,
+                              energy_terms, evaluate_chain_objectives,
+                              evaluate_objectives, feasible_mask,
+                              latency_terms, pipeline_latency,
+                              resolve_chain_wire, total_energy,
+                              total_latency)
+from repro.core.dtype_policy import (CONV_DTYPES, WIRE_DTYPES, conv_dtype,
+                                     dtype_bytes, policy_jnp_dtype,
+                                     resolve_wire_dtype, wire_dtype,
+                                     wire_payload_bytes_per_elem)
 from repro.core.hardware import (ETH_100MBPS, ETH_1GBPS, PAPER_CORE,
                                  PAPER_EDGE, PAPER_ENV_J6, PAPER_ENV_NOTE8,
                                  PAPER_REGIONAL, PROFILES, TPU_EDGE_CLOUD,
@@ -29,12 +35,17 @@ from repro.core.topsis import (chain_link_weights, column_normalise,
 __all__ = [
     "ALGORITHMS", "coc", "cos", "ebo", "lbo", "mbo", "rs",
     "ChainPlan", "MultiCutPlan", "SplitPlan",
-    "FRAME_HEADER_BYTES", "LayerProfile", "ModelProfile",
+    "FRAME_HEADER_BYTES", "INT8_FRAME_OVERHEAD_BYTES",
+    "MULTIPART_BASE_BYTES", "PART_HEADER_BYTES", "WIRE_SCALE_BYTES",
+    "LayerProfile", "ModelProfile",
     "chain_feasible_mask", "chain_stage_hop_times", "client_memory",
-    "energy_terms", "evaluate_chain_objectives", "evaluate_objectives",
-    "feasible_mask", "latency_terms", "pipeline_latency", "total_energy",
+    "download_wire_bytes", "energy_terms", "evaluate_chain_objectives",
+    "evaluate_objectives", "feasible_mask", "latency_terms",
+    "pipeline_latency", "resolve_chain_wire", "total_energy",
     "total_latency",
-    "CONV_DTYPES", "conv_dtype", "dtype_bytes", "policy_jnp_dtype",
+    "CONV_DTYPES", "WIRE_DTYPES", "conv_dtype", "dtype_bytes",
+    "policy_jnp_dtype", "resolve_wire_dtype", "wire_dtype",
+    "wire_payload_bytes_per_elem",
     "ETH_100MBPS", "ETH_1GBPS", "PAPER_CORE", "PAPER_EDGE", "PAPER_ENV_J6",
     "PAPER_ENV_NOTE8", "PAPER_REGIONAL", "PROFILES", "TPU_EDGE_CLOUD",
     "TPU_TWO_POD", "ChainHardware", "DeviceTier", "LinkProfile",

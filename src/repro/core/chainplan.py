@@ -38,6 +38,9 @@ class ChainPlan:
       field of the old two-tier SplitPlan).
     microbatches: pipeline depth M the latency objective was priced at
       (1 = sequential stage execution).
+    wire_dtypes: the concrete per-hop wire formats (``fp32``/``bf16``/
+      ``int8``) the objectives were priced under -- () on plans from
+      before the wire tier (the runtime then resolves from env).
     """
 
     model: str
@@ -49,6 +52,7 @@ class ChainPlan:
     links: tuple[LinkProfile, ...]
     tiers: tuple[str, ...]
     microbatches: int = 1
+    wire_dtypes: tuple[str, ...] = ()
 
     def __post_init__(self):
         L = self.num_layers
@@ -74,6 +78,11 @@ class ChainPlan:
             raise ValueError(
                 f"ChainPlan microbatches must be >= 1, got "
                 f"{self.microbatches}")
+        if self.wire_dtypes and len(self.wire_dtypes) != len(self.links):
+            raise ValueError(
+                f"ChainPlan wire/link mismatch: {len(self.links)} links "
+                f"need {len(self.links)} wire dtypes, got "
+                f"{len(self.wire_dtypes)}")
 
     # -- chain views ----------------------------------------------------
     @property
@@ -106,12 +115,16 @@ class ChainPlan:
                 f"merge_hop: hop must be in [0, {len(self.cuts) - 1}], "
                 f"got {hop}")
         cuts = self.cuts[:hop] + self.cuts[hop + 1:]
+        wires = self.wire_dtypes
+        if wires:
+            wires = wires[:hop] + wires[hop + 1:]
         return dataclasses.replace(
             self, cuts=cuts,
             pareto_cuts=np.empty((0, len(cuts)), np.int64),
             pareto_F=np.empty((0, 3)),
             links=self.links[:hop] + self.links[hop + 1:],
-            tiers=self.tiers[:hop + 1] + self.tiers[hop + 2:])
+            tiers=self.tiers[:hop + 1] + self.tiers[hop + 2:],
+            wire_dtypes=wires)
 
     # -- two-tier (K=2) legacy surface ---------------------------------
     @property

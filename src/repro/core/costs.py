@@ -28,13 +28,38 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.dtype_policy import conv_dtype, dtype_bytes
+from repro.core.dtype_policy import (conv_dtype, dtype_bytes,
+                                     resolve_wire_dtype,
+                                     wire_payload_bytes_per_elem)
 from repro.core.hardware import ChainHardware, DeviceTier, TwoTierHardware
 
 # Per-transfer framing overhead (crc32 + length) the reliable transfer
 # layer adds to every wire attempt -- runtime/transfer.py aliases this, so
 # the pipeline cost model and the executor charge the same bytes.
 FRAME_HEADER_BYTES = 8
+
+# Multipart framing an int8 boundary adds inside the payload: a part-count
+# word plus a (length, crc32) header per part -- (scales, data) is two
+# parts.  runtime/transfer.py's pack_frames aliases these too.
+PART_HEADER_BYTES = 8
+MULTIPART_BASE_BYTES = 4
+INT8_FRAME_OVERHEAD_BYTES = MULTIPART_BASE_BYTES + 2 * PART_HEADER_BYTES
+
+# One fp32 absmax scale accompanies each quantization channel.
+WIRE_SCALE_BYTES = 4
+
+# ``hw.download_bytes`` is calibrated as an fp32-sized result payload
+# (paper Eq. 11's fixed d); the wire policy rescales its element bytes.
+DOWNLOAD_BASE_ELEM_BYTES = 4.0
+
+# Codec compute surcharge, in passes over the boundary tensor's storage
+# bytes: int8 quantize = absmax reduce + scale/round (fused kernel, but the
+# tensor is still read twice conceptually), dequantize = one pass; a plain
+# float cast = one pass each side.  Charged on the sending/receiving tier
+# so the optimiser sees that re-encoding is not free.
+QUANT_ENCODE_PASSES = 2.0
+QUANT_DECODE_PASSES = 1.0
+CAST_PASSES = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +75,10 @@ class LayerProfile:
     # Extra payload that must accompany a split after this layer (e.g. SSM /
     # WKV recurrent state for the remaining layers, paper-CNN: 0).
     state_bytes: float = 0.0
+    # Quantization groups of the boundary tensor (channel count for feature
+    # maps, 1 for flat activations; 0 = unknown, treated as 1) -- prices the
+    # per-channel fp32 scales an int8 wire format ships.
+    boundary_channels: float = 0.0
 
     @property
     def mem_bytes(self) -> float:
@@ -76,6 +105,8 @@ class ModelProfile:
     # for the CNNs (the client casts the image like any activation);
     # False when the input is policy-independent (int32 token ids).
     input_follows_dtype: bool = True
+    # Quantization groups of the l1=0 input upload (image channels).
+    input_channels: float = 0.0
 
     @property
     def num_layers(self) -> int:
@@ -126,6 +157,34 @@ class ModelProfile:
         b[-1] = 0.0
         return np.array(b)
 
+    def boundary_groups(self) -> np.ndarray:
+        """boundary_groups[i] = quantization channels of boundary ``i``
+        (unknown counts fall back to 1 = per-tensor)."""
+        g = [self.input_channels or 1.0]
+        for l in self.layers:
+            g.append(l.boundary_channels or 1.0)
+        return np.array(g)
+
+    def wire_boundary(self, wire: str | None = None,
+                      hop: int | None = None) -> np.ndarray:
+        """boundary() priced in the wire format of one hop.
+
+        ``follow`` (and any wire format equal to the storage dtype) returns
+        ``boundary()`` unchanged -- the legacy bytes, exactly.  A float wire
+        format rescales element bytes; ``int8`` charges 1 byte/element plus
+        the per-channel fp32 scales and the two-part (scales, data) framing
+        overhead the transfer layer actually puts on the wire."""
+        w = resolve_wire_dtype(wire, storage=self.dtype, hop=hop)
+        b = self.boundary()
+        if w == self.dtype:
+            return b
+        elems = b / dtype_bytes(self.dtype)
+        if w != "int8":
+            return elems * wire_payload_bytes_per_elem(w)
+        wb = (elems + WIRE_SCALE_BYTES * self.boundary_groups()
+              + INT8_FRAME_OVERHEAD_BYTES)
+        return np.where(elems > 0, wb, 0.0)
+
 
 # ---------------------------------------------------------------------------
 # Latency model
@@ -141,9 +200,42 @@ def _tier_compute_time(tier: DeviceTier, mem_bytes, flops, hbm_bytes):
     return mem_bytes / tier.compute_scale
 
 
-def latency_terms(profile: ModelProfile, hw: TwoTierHardware):
+def _codec_passes(wire: str, storage: str) -> tuple[float, float]:
+    """(encode, decode) passes over the boundary tensor for one hop."""
+    if wire == storage:
+        return 0.0, 0.0
+    if wire == "int8":
+        return QUANT_ENCODE_PASSES, QUANT_DECODE_PASSES
+    return CAST_PASSES, CAST_PASSES
+
+
+def _codec_time(tier: DeviceTier, touched_bytes):
+    """Seconds one tier spends re-encoding ``touched_bytes`` of boundary."""
+    if tier.is_roofline:
+        return touched_bytes / tier.hbm_bw
+    return touched_bytes / tier.compute_scale
+
+
+def download_wire_bytes(download_bytes: float, wire: str) -> float:
+    """The fixed result payload priced in the wire format (satellite fix:
+    a bf16/int8 plan no longer charges an fp32-sized download)."""
+    if wire == "fp32":
+        return float(download_bytes)
+    elems = download_bytes / DOWNLOAD_BASE_ELEM_BYTES
+    if wire == "int8":
+        # per-tensor quantized result vector: one scale, two-part framing
+        return elems + WIRE_SCALE_BYTES + INT8_FRAME_OVERHEAD_BYTES
+    return elems * wire_payload_bytes_per_elem(wire)
+
+
+def latency_terms(profile: ModelProfile, hw: TwoTierHardware,
+                  wire: str | None = None):
     """Return (T_client, T_upload, T_server, T_download) arrays indexed by
-    split index l1 = 0..L (l1 layers on the client)."""
+    split index l1 = 0..L (l1 layers on the client).
+
+    ``wire`` is the hop's wire-dtype policy (default: env resolution;
+    ``follow`` prices the storage bytes, unchanged).  A re-encoding wire
+    format also bills the quantize/dequantize passes on each tier."""
     cm = profile.cum_mem()
     cf = profile.cum_flops()
     # HBM traffic proxy: weights + activations each touched once.
@@ -151,35 +243,46 @@ def latency_terms(profile: ModelProfile, hw: TwoTierHardware):
     t_client = _tier_compute_time(hw.client, cm, cf, ch)
     t_server = _tier_compute_time(hw.server, cm[-1] - cm, cf[-1] - cf,
                                   ch[-1] - ch)
-    t_upload = profile.boundary() / hw.link.bandwidth
-    t_download = np.full_like(t_upload, hw.download_bytes / hw.link.bandwidth)
+    w = resolve_wire_dtype(wire, storage=profile.dtype, hop=0)
+    t_upload = profile.wire_boundary(w) / hw.link.bandwidth
+    enc_p, dec_p = _codec_passes(w, profile.dtype)
+    if enc_p:
+        bound = profile.boundary()
+        t_client = t_client + _codec_time(hw.client, enc_p * bound)
+        t_server = t_server + _codec_time(hw.server, dec_p * bound)
+    d_bytes = download_wire_bytes(hw.download_bytes, w)
+    t_download = np.full_like(t_upload, d_bytes / hw.link.bandwidth)
     # COS (l1 = L): no server interaction at all.
     t_download[-1] = 0.0
     # COC (l1 = 0): client does nothing.
     return t_client, t_upload, t_server, t_download
 
 
-def total_latency(profile: ModelProfile, hw: TwoTierHardware) -> np.ndarray:
+def total_latency(profile: ModelProfile, hw: TwoTierHardware,
+                  wire: str | None = None) -> np.ndarray:
     """Paper Eq. 5 (download latency measured negligible, excluded)."""
-    t_c, t_u, t_s, _ = latency_terms(profile, hw)
+    t_c, t_u, t_s, _ = latency_terms(profile, hw, wire)
     return t_c + t_u + t_s
 
 
 # ---------------------------------------------------------------------------
 # Energy model (client-side energy only, per the paper)
 # ---------------------------------------------------------------------------
-def energy_terms(profile: ModelProfile, hw: TwoTierHardware):
+def energy_terms(profile: ModelProfile, hw: TwoTierHardware,
+                 wire: str | None = None):
     """Return (E_client, E_upload, E_download) arrays indexed by l1."""
-    t_c, t_u, _, t_d = latency_terms(profile, hw)
+    t_c, t_u, _, t_d = latency_terms(profile, hw, wire)
+    w = resolve_wire_dtype(wire, storage=profile.dtype, hop=0)
     cf = profile.cum_flops()
     cm = profile.cum_mem()
     if hw.client.is_roofline:
         e_client = (cf * hw.client.pj_per_flop
                     + cm * hw.client.pj_per_hbm_byte) * 1e-12
-        e_link_up = profile.boundary() * hw.link.pj_per_byte * 1e-12
-        e_link_down = np.full_like(e_link_up,
-                                   hw.download_bytes * hw.link.pj_per_byte
-                                   * 1e-12)
+        e_link_up = profile.wire_boundary(w) * hw.link.pj_per_byte * 1e-12
+        e_link_down = np.full_like(
+            e_link_up,
+            download_wire_bytes(hw.download_bytes, w)
+            * hw.link.pj_per_byte * 1e-12)
         e_link_down[-1] = 0.0
         return e_client, e_link_up, e_link_down
     # Paper model: throughput tau == link bandwidth while transferring
@@ -190,9 +293,10 @@ def energy_terms(profile: ModelProfile, hw: TwoTierHardware):
     return p_client * t_c, p_up * t_u, p_down * t_d
 
 
-def total_energy(profile: ModelProfile, hw: TwoTierHardware) -> np.ndarray:
+def total_energy(profile: ModelProfile, hw: TwoTierHardware,
+                 wire: str | None = None) -> np.ndarray:
     """Paper Eq. 13."""
-    e_c, e_u, e_d = energy_terms(profile, hw)
+    e_c, e_u, e_d = energy_terms(profile, hw, wire)
     return e_c + e_u + e_d
 
 
@@ -214,10 +318,11 @@ def client_memory(profile: ModelProfile, mode: str = "full") -> np.ndarray:
 
 
 def evaluate_objectives(profile: ModelProfile, hw: TwoTierHardware,
-                        f3_mode: str = "full") -> np.ndarray:
+                        f3_mode: str = "full",
+                        wire: str | None = None) -> np.ndarray:
     """(L+1, 3) matrix of (f1 latency, f2 energy, f3 memory) per split l1."""
-    return np.stack([total_latency(profile, hw),
-                     total_energy(profile, hw),
+    return np.stack([total_latency(profile, hw, wire),
+                     total_energy(profile, hw, wire),
                      client_memory(profile, f3_mode)], axis=1)
 
 
@@ -252,19 +357,38 @@ def _chain_edges(profile: ModelProfile, genomes: np.ndarray) -> np.ndarray:
                            np.full((n, 1), L, np.int64)], axis=1)
 
 
+def resolve_chain_wire(wire, n_hops: int, storage: str) -> tuple[str, ...]:
+    """Concrete per-hop wire formats for a K-1-hop chain.
+
+    ``wire`` may be None (env resolution per hop: ``REPRO_LINK{k}_
+    WIRE_DTYPE`` over ``REPRO_WIRE_DTYPE`` over ``follow``), one policy
+    string for every hop, or a per-hop sequence of policies/None."""
+    if wire is None or isinstance(wire, str):
+        return tuple(resolve_wire_dtype(wire, storage=storage, hop=k)
+                     for k in range(n_hops))
+    ws = tuple(wire)
+    if len(ws) != n_hops:
+        raise ValueError(
+            f"per-hop wire needs {n_hops} entries, got {len(ws)}")
+    return tuple(resolve_wire_dtype(wk, storage=storage, hop=k)
+                 for k, wk in enumerate(ws))
+
+
 def chain_stage_hop_times(profile: ModelProfile, hw: ChainHardware,
-                          genomes: np.ndarray
+                          genomes: np.ndarray, wire=None
                           ) -> tuple[np.ndarray, np.ndarray]:
     """Per-stage compute and per-hop transfer seconds for cut vectors.
 
     genomes: (n, K-1) cut points (unsorted ok; sorted internally).
     Returns ``(stage_T, hop_T)`` with shapes (n, K) and (n, K-1) -- the
     whole-batch times the pipeline latency model (and the chain runtime's
-    virtual-clock schedule) are built from."""
+    virtual-clock schedule) are built from.  ``wire`` prices each hop in
+    its wire format and bills the codec passes on the adjacent tiers."""
     edges = _chain_edges(profile, genomes)
     cf = profile.cum_flops()
     cm = profile.cum_mem()
     bound = profile.boundary()
+    ws = resolve_chain_wire(wire, len(hw.links), profile.dtype)
     n, K = edges.shape[0], len(hw.tiers)
     stage_T = np.zeros((n, K))
     for k, tier in enumerate(hw.tiers):
@@ -273,7 +397,13 @@ def chain_stage_hop_times(profile: ModelProfile, hw: ChainHardware,
         stage_T[:, k] = _tier_compute_time(tier, m_k, f_k, m_k)
     hop_T = np.zeros((n, K - 1))
     for k, link in enumerate(hw.links):
-        hop_T[:, k] = bound[edges[:, k + 1]] / link.bandwidth
+        wb = profile.wire_boundary(ws[k])
+        hop_T[:, k] = wb[edges[:, k + 1]] / link.bandwidth
+        enc_p, dec_p = _codec_passes(ws[k], profile.dtype)
+        if enc_p:
+            b_k = bound[edges[:, k + 1]]
+            stage_T[:, k] += _codec_time(hw.tiers[k], enc_p * b_k)
+            stage_T[:, k + 1] += _codec_time(hw.tiers[k + 1], dec_p * b_k)
     return stage_T, hop_T
 
 
@@ -329,7 +459,8 @@ def chain_feasible_mask(profile: ModelProfile, hw: ChainHardware,
 
 def evaluate_chain_objectives(profile: ModelProfile, hw: ChainHardware,
                               genomes: np.ndarray, f3_mode: str = "full",
-                              microbatches: int = 1) -> np.ndarray:
+                              microbatches: int = 1,
+                              wire=None) -> np.ndarray:
     """(n, 3) chain objectives -- the exact K-tier generalisation of
     ``evaluate_objectives``.
 
@@ -345,8 +476,8 @@ def evaluate_chain_objectives(profile: ModelProfile, hw: ChainHardware,
     edges = _chain_edges(profile, genomes)
     cf = profile.cum_flops()
     cm = profile.cum_mem()
-    bound = profile.boundary()
-    stage_T, hop_T = chain_stage_hop_times(profile, hw, genomes)
+    ws = resolve_chain_wire(wire, len(hw.links), profile.dtype)
+    stage_T, hop_T = chain_stage_hop_times(profile, hw, genomes, wire=ws)
     bws = np.array([link.bandwidth for link in hw.links])
     lat = pipeline_latency(stage_T, hop_T, microbatches,
                            link_bandwidths=bws)
@@ -361,18 +492,20 @@ def evaluate_chain_objectives(profile: ModelProfile, hw: ChainHardware,
         else:
             en += tier.compute_power_w() * stage_T[:, k]
     for k, link in enumerate(hw.links):
-        b_k = bound[edges[:, k + 1]]
+        b_k = profile.wire_boundary(ws[k])[edges[:, k + 1]]
         if link.pj_per_byte:
             en += b_k * link.pj_per_byte * 1e-12
         else:
             en += link.upload_power_w(link.bandwidth) * hop_T[:, k]
-    # result download, charged on the device's hop-0 radio (Eq. 12)
+    # result download, charged on the device's hop-0 radio (Eq. 12),
+    # priced in hop 0's wire format
     down = hw.links[0]
+    d_bytes = download_wire_bytes(hw.download_bytes, ws[0])
     if down.pj_per_byte:
-        en += hw.download_bytes * down.pj_per_byte * 1e-12
+        en += d_bytes * down.pj_per_byte * 1e-12
     else:
         en += down.download_power_w(down.bandwidth) \
-            * (hw.download_bytes / down.bandwidth)
+            * (d_bytes / down.bandwidth)
     if microbatches > 1:
         extra = (microbatches - 1) * FRAME_HEADER_BYTES
         for k, link in enumerate(hw.links):

@@ -34,8 +34,10 @@ import numpy as np
 from repro.core.chainplan import ChainPlan
 from repro.core.chainplan import MultiCutPlan as MultiCutPlan  # noqa: F401
 from repro.core.costs import (FRAME_HEADER_BYTES, ModelProfile,
+                              _codec_passes, _codec_time,
                               chain_feasible_mask,
-                              evaluate_chain_objectives, pipeline_latency)
+                              evaluate_chain_objectives, pipeline_latency,
+                              resolve_chain_wire)
 from repro.core.hardware import ChainHardware as ChainHardware  # noqa: F401
 from repro.core.hardware import TwoTierHardware, chain_of
 from repro.core.nsga2 import NSGA2Config, nsga2
@@ -60,17 +62,20 @@ def _stage_tables(profile: ModelProfile, hw: ChainHardware):
 
 def evaluate_multicut(profile: ModelProfile, hw: ChainHardware,
                       genomes: np.ndarray,
-                      microbatches: int = 1) -> np.ndarray:
+                      microbatches: int = 1, wire=None) -> np.ndarray:
     """genomes: (n, K-1) cut points (unsorted ok; sorted internally).
     Returns (n, 3) objectives with constraint penalties applied.
 
     ``microbatches`` > 1 replaces the sequential latency sum with the
     pipelined fill-and-drain term (``costs.pipeline_latency``) and adds
     the per-hop framing energy the M-way split costs; M=1 keeps the
-    historical numbers bit-for-bit."""
+    historical numbers bit-for-bit.  ``wire`` prices each hop's bytes in
+    its wire format (plus the codec passes on adjacent tiers); the
+    default ``follow`` resolution keeps the storage bytes unchanged."""
     L = profile.num_layers
     K = len(hw.tiers)
     flops, mem, bound = _stage_tables(profile, hw)
+    ws = resolve_chain_wire(wire, len(hw.links), profile.dtype)
     cuts = np.sort(np.asarray(genomes, np.int64), axis=1)
     n = cuts.shape[0]
     edges = np.concatenate([np.zeros((n, 1), np.int64), cuts,
@@ -95,7 +100,7 @@ def evaluate_multicut(profile: ModelProfile, hw: ChainHardware,
         peak = np.maximum(peak, m_k / tier.memory_budget)
         stage_T[:, k] = t_k
     for k, link in enumerate(hw.links):
-        b_k = bound[edges[:, k + 1]]
+        b_k = profile.wire_boundary(ws[k])[edges[:, k + 1]]
         t_l = b_k / link.bandwidth
         lat += t_l
         hop_T[:, k] = t_l
@@ -103,6 +108,18 @@ def evaluate_multicut(profile: ModelProfile, hw: ChainHardware,
             en += b_k * link.pj_per_byte * 1e-12
         else:
             en += link.upload_power_w(link.bandwidth) * t_l
+        enc_p, dec_p = _codec_passes(ws[k], profile.dtype)
+        if enc_p:
+            b_raw = bound[edges[:, k + 1]]
+            for t_i, passes in ((k, enc_p), (k + 1, dec_p)):
+                tier = hw.tiers[t_i]
+                t_c = _codec_time(tier, passes * b_raw)
+                lat += t_c
+                stage_T[:, t_i] += t_c
+                if tier.is_roofline:
+                    en += passes * b_raw * tier.pj_per_hbm_byte * 1e-12
+                else:
+                    en += tier.compute_power_w() * t_c
     if microbatches > 1:
         bws = np.array([link.bandwidth for link in hw.links])
         lat = pipeline_latency(stage_T, hop_T, microbatches,
@@ -125,7 +142,8 @@ def evaluate_multicut(profile: ModelProfile, hw: ChainHardware,
 def _chain_plan(profile: ModelProfile, hw: ChainHardware,
                 cuts: tuple[int, ...], F_pick: np.ndarray,
                 pareto_cuts: np.ndarray, pareto_F: np.ndarray,
-                microbatches: int = 1) -> ChainPlan:
+                microbatches: int = 1,
+                wire_dtypes: tuple[str, ...] = ()) -> ChainPlan:
     return ChainPlan(model=profile.name, num_layers=profile.num_layers,
                      cuts=cuts,
                      objectives=tuple(float(v) for v in F_pick),
@@ -133,27 +151,31 @@ def _chain_plan(profile: ModelProfile, hw: ChainHardware,
                      pareto_F=np.asarray(pareto_F, float),
                      links=tuple(hw.links),
                      tiers=tuple(t.name for t in hw.tiers),
-                     microbatches=microbatches)
+                     microbatches=microbatches,
+                     wire_dtypes=wire_dtypes)
 
 
 def smartsplit_multicut(profile: ModelProfile, hw: ChainHardware,
                         config: NSGA2Config | None = None,
-                        microbatches: int = 1) -> ChainPlan:
+                        microbatches: int = 1, wire=None) -> ChainPlan:
     """Algorithm 1 with the K-cut genome (original chain evaluator)."""
     L = profile.num_layers
     K = len(hw.tiers)
+    ws = resolve_chain_wire(wire, len(hw.links), profile.dtype)
     config = config or NSGA2Config(pop_size=128, generations=80, seed=0)
     lower = np.ones(K - 1, np.int64)
     upper = np.full(K - 1, L - 1, np.int64)
-    res = nsga2(lambda g: evaluate_multicut(profile, hw, g, microbatches),
+    res = nsga2(lambda g: evaluate_multicut(profile, hw, g, microbatches,
+                                            ws),
                 lower, upper, config)
-    F = evaluate_multicut(profile, hw, res.pareto_genomes, microbatches)
+    F = evaluate_multicut(profile, hw, res.pareto_genomes, microbatches,
+                          ws)
     feas = F[:, 0] < _PENALTY / 2
     pick = topsis_select(F, feasible=feas)
     cuts = tuple(int(c) for c in np.sort(res.pareto_genomes[pick]))
     return _chain_plan(profile, hw, cuts, F[pick],
                        np.sort(res.pareto_genomes, axis=1), F,
-                       microbatches)
+                       microbatches, ws)
 
 
 def _chain_candidates(L: int, K: int) -> np.ndarray:
@@ -168,7 +190,8 @@ def smartsplit_chain(profile: ModelProfile,
                      config: NSGA2Config | None = None,
                      weights: np.ndarray | None = None,
                      use_anti_ideal: bool = False,
-                     f3_mode: str = "full") -> ChainPlan:
+                     f3_mode: str = "full",
+                     wire=None) -> ChainPlan:
     """Algorithm 1 over a K-tier chain with paper-faithful objectives.
 
     The unified planner: pass a ``TwoTierHardware`` (wrapped via
@@ -186,11 +209,12 @@ def smartsplit_chain(profile: ModelProfile,
         raise ValueError(
             f"smartsplit_chain: {K} tiers need >= {K} layers, "
             f"model {profile.name} has {L}")
+    ws = resolve_chain_wire(wire, len(hw.links), profile.dtype)
     n_combos = math.comb(L - 1, K - 1)
     if n_combos <= _EXHAUSTIVE_LIMIT:
         genomes = _chain_candidates(L, K)
         F = evaluate_chain_objectives(profile, hw, genomes, f3_mode,
-                                      microbatches)
+                                      microbatches, ws)
         feas = chain_feasible_mask(profile, hw, genomes)
         Fp = F.copy()
         Fp[~feas] += _PENALTY
@@ -206,20 +230,20 @@ def smartsplit_chain(profile: ModelProfile,
 
         def evaluate(g: np.ndarray) -> np.ndarray:
             F = evaluate_chain_objectives(profile, hw, g, f3_mode,
-                                          microbatches)
+                                          microbatches, ws)
             F[~chain_feasible_mask(profile, hw, g)] += _PENALTY
             return F
 
         res = nsga2(evaluate, lower, upper, config)
         pareto_cuts = np.sort(res.pareto_genomes, axis=1)
         pareto_F = evaluate_chain_objectives(profile, hw, pareto_cuts,
-                                             f3_mode, microbatches)
+                                             f3_mode, microbatches, ws)
         feas_front = chain_feasible_mask(profile, hw, pareto_cuts)
     pick = topsis_select(pareto_F, feasible=feas_front, weights=weights,
                          use_anti_ideal=use_anti_ideal)
     cuts = tuple(int(c) for c in pareto_cuts[pick])
     return _chain_plan(profile, hw, cuts, pareto_F[pick], pareto_cuts,
-                       pareto_F, microbatches)
+                       pareto_F, microbatches, ws)
 
 
 def repick_chain(plan: ChainPlan, profile: ModelProfile,
@@ -254,8 +278,9 @@ def repick_chain(plan: ChainPlan, profile: ModelProfile,
     cand = np.asarray(plan.pareto_cuts, np.int64)
     if cand.size == 0:
         raise ValueError("repick_chain: plan carries no cached front")
+    wire = plan.wire_dtypes or None
     F = evaluate_chain_objectives(profile, hw, cand, f3_mode,
-                                  plan.microbatches)
+                                  plan.microbatches, wire)
     feas = chain_feasible_mask(profile, hw, cand)
     if exclude:
         tried = {tuple(int(c) for c in cuts) for cuts in exclude}

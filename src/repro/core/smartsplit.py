@@ -15,6 +15,7 @@ from repro.core.chainplan import ChainPlan
 from repro.core.chainplan import SplitPlan as SplitPlan  # noqa: F401  (re-export)
 from repro.core.costs import (ModelProfile, evaluate_objectives,
                               feasible_mask)
+from repro.core.dtype_policy import resolve_wire_dtype
 from repro.core.hardware import TwoTierHardware
 from repro.core.nsga2 import NSGA2Config, NSGA2Result, nsga2
 from repro.core.pareto import exhaustive_pareto
@@ -25,7 +26,8 @@ _PENALTY = 1e30
 
 def _two_tier_plan(profile: ModelProfile, hw: TwoTierHardware,
                    l1: int, pareto_l1: np.ndarray,
-                   pareto_F: np.ndarray, F_all: np.ndarray) -> ChainPlan:
+                   pareto_F: np.ndarray, F_all: np.ndarray,
+                   wire: str) -> ChainPlan:
     """Package a picked K=2 split as the unified chain plan."""
     return ChainPlan(model=profile.name, num_layers=profile.num_layers,
                      cuts=(l1,),
@@ -34,20 +36,28 @@ def _two_tier_plan(profile: ModelProfile, hw: TwoTierHardware,
                                             np.int64).reshape(-1, 1),
                      pareto_F=pareto_F,
                      links=(hw.link,),
-                     tiers=(hw.client.name, hw.server.name))
+                     tiers=(hw.client.name, hw.server.name),
+                     wire_dtypes=(wire,))
 
 
 def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
                config: NSGA2Config = NSGA2Config(),
                weights: np.ndarray | None = None,
                use_anti_ideal: bool = False,
-               f3_mode: str = "full") -> SplitPlan:
+               f3_mode: str = "full",
+               wire: str | None = None) -> SplitPlan:
     """Paper Algorithm 1.
 
     Line 1:   O <- NSGA2(F)          (Pareto set of split indices)
     Lines 2-7: TOPSIS over the Pareto set with constraint filtering.
+
+    ``wire`` is the boundary wire-dtype policy the objectives are priced
+    under (default: env resolution; ``follow`` = the storage dtype, the
+    legacy numbers bit-for-bit).  An ``int8`` wire shrinks the upload
+    term ~4x, so the pick can move toward earlier, bigger boundaries.
     """
-    F_all = evaluate_objectives(profile, hw, f3_mode)   # (L+1, 3)
+    wire = resolve_wire_dtype(wire, storage=profile.dtype, hop=0)
+    F_all = evaluate_objectives(profile, hw, f3_mode, wire)   # (L+1, 3)
     feas_all = feasible_mask(profile, hw)
     L = profile.num_layers
 
@@ -72,7 +82,8 @@ def smartsplit(profile: ModelProfile, hw: TwoTierHardware,
     pick = topsis_select(pareto_F, feasible=feas, weights=weights,
                          use_anti_ideal=use_anti_ideal)
     l1 = int(pareto_l1[pick])
-    return _two_tier_plan(profile, hw, l1, pareto_l1, pareto_F, F_all)
+    return _two_tier_plan(profile, hw, l1, pareto_l1, pareto_F, F_all,
+                          wire)
 
 
 def repick_split(plan: SplitPlan, profile: ModelProfile,
@@ -105,7 +116,8 @@ def repick_split(plan: SplitPlan, profile: ModelProfile,
     if bandwidth is not None:
         ratio = hw.link.bandwidth / bandwidth
         hw = hw.with_link_bandwidth(bandwidth)
-    F_all = evaluate_objectives(profile, hw, f3_mode)
+    wire = plan.wire_dtypes[0] if plan.wire_dtypes else None
+    F_all = evaluate_objectives(profile, hw, f3_mode, wire)
     idx = np.asarray(plan.pareto_indices, int)
     feas = feasible_mask(profile, hw)[idx]
     if exclude:
@@ -125,9 +137,11 @@ def repick_split(plan: SplitPlan, profile: ModelProfile,
 def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
                           weights: np.ndarray | None = None,
                           use_anti_ideal: bool = False,
-                          f3_mode: str = "full") -> SplitPlan:
+                          f3_mode: str = "full",
+                          wire: str | None = None) -> SplitPlan:
     """Ground-truth Algorithm 1 with the GA replaced by enumeration."""
-    F_all = evaluate_objectives(profile, hw, f3_mode)
+    wire = resolve_wire_dtype(wire, storage=profile.dtype, hop=0)
+    F_all = evaluate_objectives(profile, hw, f3_mode, wire)
     feas = feasible_mask(profile, hw)
     L = profile.num_layers
     candidates = np.arange(1, L)                        # 1 <= l1 <= L-1
@@ -142,4 +156,4 @@ def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
                          weights=weights, use_anti_ideal=use_anti_ideal)
     l1 = int(pareto_l1[pick])
     return _two_tier_plan(profile, hw, l1, pareto_l1, F_all[pareto_l1],
-                          F_all)
+                          F_all, wire)

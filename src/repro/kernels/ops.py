@@ -21,6 +21,10 @@ from repro.kernels import conv2d as _conv
 from repro.kernels import flash_attention as _fa
 from repro.kernels import mamba2_ssd as _ssd
 from repro.kernels import rwkv6_wkv as _wkv
+# Wire-dtype boundary codec (fused int8 quantize/dequantize + jnp fallback);
+# re-exported here so callers reach every kernel through one surface.
+from repro.kernels.quant import (boundary_roundtrip,  # noqa: F401
+                                 dequantize_boundary, quantize_boundary)
 
 
 def interpret_mode() -> bool:

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import all_configs
-from repro.core import CONV_DTYPES, TPU_EDGE_CLOUD, smartsplit
+from repro.core import CONV_DTYPES, TPU_EDGE_CLOUD, WIRE_DTYPES, smartsplit
 from repro.core.dtype_policy import conv_dtype
 from repro.core.dtype_policy import dtype_bytes as policy_bytes
 from repro.launch.partition import split_boundary_struct
@@ -55,14 +55,17 @@ def serve_cnn(args) -> None:
         else int(os.environ.get("REPRO_CHAIN_MICROBATCH", 1))
     hw = paper_chain(num_tiers)
     prof = cnn_profile(args.cnn, batch=args.batch, dtype=policy)
-    plan = smartsplit_chain(prof, hw, microbatches=microbatch)
+    plan = smartsplit_chain(prof, hw, microbatches=microbatch,
+                            wire=args.wire_dtype)
     lat, en, mem = plan.objectives
     chain = " -> ".join(f"{t}[{a}:{b})" for t, (a, b)
                         in zip(plan.tiers, plan.stages()))
+    wires = plan.wire_dtypes or ("?",) * len(hw.links)
     print(f"SmartSplit chain: {chain}")
     print(f"  cuts={list(plan.cuts)}/{prof.num_layers} M={microbatch} "
           f"latency={lat:.2e}s energy={en:.2e}J "
-          f"device-mem={mem / 2**20:.1f}MiB ({policy})")
+          f"device-mem={mem / 2**20:.1f}MiB ({policy}, "
+          f"wire={'/'.join(wires)})")
 
     links = chain_links_from_env([link.bandwidth for link in hw.links])
     if args.drop:
@@ -71,7 +74,8 @@ def serve_cnn(args) -> None:
     rt = ChainRuntime(args.cnn, cnn_lib.init_cnn(
         jax.random.PRNGKey(0), cnn_lib.CNN_MODELS[args.cnn]),
         plan, prof, hw, links=links, dtype=policy,
-        microbatches=microbatch, policy=RetryPolicy.from_env())
+        wire=args.wire_dtype, microbatches=microbatch,
+        policy=RetryPolicy.from_env())
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(args.batch,) + cnn_lib.INPUT_SHAPE),
                     jnp.float32)
@@ -88,7 +92,9 @@ def serve_cnn(args) -> None:
           f"active_cuts={s['active_cuts']}")
     for h in s["hops"]:
         link_c = h["link"]
-        print(f"  hop{h['hop']}: attempts={h['attempts']} "
+        print(f"  hop{h['hop']}: wire={h['wire_dtype']} "
+              f"attempts={h['attempts']} "
+              f"sent={h['wire_bytes']}B (raw {h['raw_bytes']}B) "
               f"retx={h['retransmitted_bytes']}B merges={h['merges']} "
               f"est_bw={h['est_bandwidth']:.3g}B/s "
               f"degradation={h['degradation']:.2f} "
@@ -123,6 +129,11 @@ def main():
     ap.add_argument("--dtype", default=None, choices=CONV_DTYPES,
                     help="boundary/storage dtype policy for --plan-split "
                          "(default: REPRO_CONV_DTYPE, else fp32)")
+    ap.add_argument("--wire-dtype", default=None, choices=WIRE_DTYPES,
+                    help="--cnn only: boundary wire format for every hop "
+                         "(int8 = quantized streaming; default: "
+                         "REPRO_LINK{k}_WIRE_DTYPE / REPRO_WIRE_DTYPE, "
+                         "else follow = the storage dtype)")
     args = ap.parse_args()
 
     if args.cnn:

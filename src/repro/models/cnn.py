@@ -548,7 +548,8 @@ def apply_cnn(layers: list[Layer], params, x, *, start: int = 0,
 
 
 def apply_split(layers: list[Layer], params, x, split_index: int,
-                backend: str | None = None, dtype: str | None = None):
+                backend: str | None = None, dtype: str | None = None,
+                wire: str | None = None):
     """Client runs [0, l1), payload crosses the link, server runs [l1, L).
 
     Returns (logits, boundary_payload) so callers can account the transfer.
@@ -556,15 +557,28 @@ def apply_split(layers: list[Layer], params, x, split_index: int,
     bfloat16 -- exactly the halved I|l1 the dtype-aware cost model feeds
     the optimiser.
 
+    ``wire`` (``fp32``/``bf16``/``int8``/``follow``; None resolves
+    ``REPRO_WIRE_DTYPE``) applies the wire-format round-trip to the
+    boundary the server stage consumes -- ``kernels.quant.
+    boundary_roundtrip``, the same math the runtime codec performs -- so
+    this is the bit-exact fault-free reference for a quantized-wire
+    runtime run.  The returned boundary is the client's (pre-encode)
+    activation either way.
+
     ``split_index`` must lie in [0, L]: the degenerate ends are the
     paper's COC (l1=0, boundary = the input upload) and COS-like
     all-on-device placement (l1=L, nothing crosses the link)."""
+    from repro.core.dtype_policy import resolve_wire_dtype
+    from repro.kernels.quant import boundary_roundtrip
     if not 0 <= split_index <= len(layers):
         raise ValueError(
             f"apply_split: split_index must be in [0, {len(layers)}] "
             f"(L={len(layers)} layers), got {split_index}")
     boundary = apply_cnn(layers, params, x, start=0, stop=split_index,
                          backend=backend, dtype=dtype)
-    logits = apply_cnn(layers, params, boundary, start=split_index,
+    w = resolve_wire_dtype(wire, storage=conv_dtype(dtype))
+    received = boundary if w == conv_dtype(dtype) \
+        else boundary_roundtrip(boundary, w, backend=backend)
+    logits = apply_cnn(layers, params, received, start=split_index,
                        backend=backend, dtype=dtype)
     return logits, boundary

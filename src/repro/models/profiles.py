@@ -52,12 +52,18 @@ def cnn_profile(name: str, batch: int = 1,
         profs.append(LayerProfile(
             name=f"{name}.{len(profs)}.{layer.kind}", kind=layer.kind,
             flops=flops * batch, param_bytes=params * dtype_bytes,
-            act_bytes=act, boundary_bytes=act))
+            act_bytes=act, boundary_bytes=act,
+            # int8-wire scale groups: channel axis for (C, H, W) feature
+            # maps, per-tensor for flat activations (runtime convention in
+            # kernels.quant.default_channel_axis)
+            boundary_channels=float(out_shape[0])
+            if len(out_shape) >= 3 else 1.0))
         shape = out_shape
     return ModelProfile(
         name=name, layers=tuple(profs),
         input_bytes=float(np.prod(in_shape)) * dtype_bytes * batch,
-        dtype=policy)
+        dtype=policy,
+        input_channels=float(in_shape[0]) if len(in_shape) >= 3 else 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -90,7 +96,8 @@ def transformer_profile(cfg, *, seq_len: int, batch: int,
             name=f"{cfg.name}.{i}.{block}", kind=block,
             flops=flops, param_bytes=params * dtype_bytes,
             act_bytes=hidden_bytes, boundary_bytes=hidden_bytes,
-            state_bytes=state))
+            state_bytes=state,
+            boundary_channels=float(d)))  # per-feature int8 scales
     # Embedding + unembedding bracket the stack; fold them into first/last.
     embed_flops = 0.0
     unembed_flops = 2.0 * tokens * d * cfg.padded_vocab
@@ -99,14 +106,16 @@ def transformer_profile(cfg, *, seq_len: int, batch: int,
         flops=profs[0].flops + embed_flops,
         param_bytes=profs[0].param_bytes + cfg.padded_vocab * d * dtype_bytes,
         act_bytes=profs[0].act_bytes, boundary_bytes=profs[0].boundary_bytes,
-        state_bytes=profs[0].state_bytes)
+        state_bytes=profs[0].state_bytes,
+        boundary_channels=profs[0].boundary_channels)
     last = profs[-1]
     profs[-1] = LayerProfile(
         name=last.name, kind=last.kind, flops=last.flops + unembed_flops,
         param_bytes=last.param_bytes
         + (0 if cfg.tie_embeddings else cfg.padded_vocab * d * dtype_bytes),
         act_bytes=last.act_bytes, boundary_bytes=last.boundary_bytes,
-        state_bytes=last.state_bytes)
+        state_bytes=last.state_bytes,
+        boundary_channels=last.boundary_channels)
     input_bytes = float(batch * (seq_len if mode == "prefill" else 1)) * 4
     return ModelProfile(name=f"{cfg.name}:{mode}", layers=tuple(profs),
                         input_bytes=max(input_bytes, 1.0),

@@ -13,9 +13,12 @@ from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
 from repro.runtime.runtime import (ChainInferenceResult, ChainRuntime,
                                    InferenceResult, SplitRuntime,
                                    SplitUnrecoverable, microbatch_slices)
-from repro.runtime.transfer import (ChecksumError, RetryPolicy,
+from repro.runtime.transfer import (ChecksumError, FrameError, RetryPolicy,
                                     TransferFailed, TransferOutcome,
-                                    send_with_retry)
+                                    pack_frames, send_with_retry,
+                                    unpack_frames)
+from repro.runtime.wire import (BoundaryMeta, decode_boundary,
+                                encode_boundary)
 
 __all__ = [
     "Event", "EventLog",
@@ -25,6 +28,7 @@ __all__ = [
     "EwmaLinkEstimator", "chain_estimators",
     "ChainInferenceResult", "ChainRuntime", "InferenceResult",
     "SplitRuntime", "SplitUnrecoverable", "microbatch_slices",
-    "ChecksumError", "RetryPolicy", "TransferFailed", "TransferOutcome",
-    "send_with_retry",
+    "ChecksumError", "FrameError", "RetryPolicy", "TransferFailed",
+    "TransferOutcome", "pack_frames", "send_with_retry", "unpack_frames",
+    "BoundaryMeta", "decode_boundary", "encode_boundary",
 ]

@@ -22,6 +22,7 @@ TIMEOUT = "timeout"                  # attempt failed: timeout
 OUTAGE = "outage"                    # attempt failed: outage window
 CHECKSUM_FAIL = "checksum_fail"      # delivered but corrupt (crc32)
 BACKOFF = "backoff"                  # retry wait added to the clock
+WIRE_ENCODE = "wire_encode"          # boundary re-encoded to a wire dtype
 GIVE_UP = "give_up"                  # retries exhausted for one transfer
 FALLBACK_DEVICE = "fallback_device"  # degraded to full on-device run
 STAGE_MERGE = "stage_merge"          # collapsed a cut onto the upstream tier

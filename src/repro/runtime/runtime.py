@@ -34,7 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chainplan import ChainPlan
-from repro.core.costs import ModelProfile, _tier_compute_time
+from repro.core.costs import (ModelProfile, _tier_compute_time,
+                              resolve_chain_wire)
+from repro.core.dtype_policy import conv_dtype, resolve_wire_dtype
 from repro.core.hardware import (ChainHardware, NetworkState,
                                  TwoTierHardware, chain_of)
 from repro.core.multicut import repick_chain
@@ -46,6 +48,7 @@ from repro.runtime.faults import FaultyLink, VirtualClock
 from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
 from repro.runtime.transfer import (RetryPolicy, TransferFailed,
                                     send_with_retry)
+from repro.runtime.wire import decode_boundary, encode_boundary
 
 
 class SplitUnrecoverable(RuntimeError):
@@ -90,6 +93,11 @@ class SplitRuntime:
       False to exercise the re-pick path on roomy clients).
     resplit_ratio: proactive re-split trigger -- re-pick before the next
       request once planned/estimated bandwidth exceeds this.
+    wire: boundary wire format (``fp32``/``bf16``/``int8``/``follow``).
+      None resolves plan.wire_dtypes[0] if the plan carries one, else the
+      ``REPRO_LINK0_WIRE_DTYPE`` / ``REPRO_WIRE_DTYPE`` env; ``follow``
+      (the default everywhere) ships the storage dtype -- the legacy
+      bit-identical path.
     """
 
     def __init__(self, model: str | list, params, plan: SplitPlan,
@@ -97,6 +105,7 @@ class SplitRuntime:
                  link: FaultyLink | None = None,
                  policy: RetryPolicy = RetryPolicy(),
                  backend: str | None = None, dtype: str | None = None,
+                 wire: str | None = None,
                  device_fallback: bool | None = None,
                  estimator_alpha: float = 0.3,
                  resplit_ratio: float = 2.0,
@@ -117,6 +126,10 @@ class SplitRuntime:
         self.policy = policy
         self.backend = backend
         self.dtype = dtype
+        self._storage = conv_dtype(dtype)
+        if wire is None and plan.wire_dtypes:
+            wire = plan.wire_dtypes[0]
+        self.wire = resolve_wire_dtype(wire, storage=self._storage, hop=0)
         self.device_fallback = device_fallback
         self.resplit_ratio = float(resplit_ratio)
         self.estimator = EwmaLinkEstimator(hw.link.bandwidth,
@@ -136,6 +149,7 @@ class SplitRuntime:
         self.hop_attempts = 0
         self.hop_wire_bytes = 0
         self.hop_goodput_bytes = 0
+        self.hop_raw_bytes = 0      # storage-dtype size of sent boundaries
 
     # -- stages --------------------------------------------------------
     def _run(self, x, start: int, stop: int):
@@ -213,22 +227,31 @@ class SplitRuntime:
                 logits = boundary
                 on_device = True
                 break
-            data, host = self._serialize(boundary)
+            data, meta = encode_boundary(boundary, self.wire,
+                                         backend=self.backend)
+            if self.wire != self._storage:
+                self.log.emit(ev.WIRE_ENCODE, self.link.clock,
+                              what=f"boundary@l1={l1}", wire=self.wire,
+                              raw_bytes=meta.raw_bytes,
+                              payload_bytes=len(data))
             try:
                 out = send_with_retry(self.link, data, self.policy,
                                       rng=self._jitter_rng, log=self.log,
-                                      what=f"boundary@l1={l1}")
+                                      what=f"boundary@l1={l1}",
+                                      framed=meta.framed)
                 attempts += out.attempts
                 wire += out.wire_bytes
                 goodput += out.goodput_bytes
                 self.hop_attempts += out.attempts
                 self.hop_wire_bytes += out.wire_bytes
                 self.hop_goodput_bytes += out.goodput_bytes
+                self.hop_raw_bytes += meta.raw_bytes
                 self.estimator.observe(out.goodput_bytes,
                                        out.success_elapsed_s)
                 self.net.update(self.estimator.bandwidth)
-                logits = self._run(self._deserialize(out.payload, host),
-                                   l1, L)
+                logits = self._run(
+                    decode_boundary(out.payload, meta,
+                                    backend=self.backend), l1, L)
                 on_device = False
                 break
             except TransferFailed as fail:
@@ -236,6 +259,7 @@ class SplitRuntime:
                 wire += fail.wire_bytes
                 self.hop_attempts += fail.attempts
                 self.hop_wire_bytes += fail.wire_bytes
+                self.hop_raw_bytes += meta.raw_bytes
                 # the link burned fail.elapsed_s and delivered nothing
                 self.estimator.observe(0.0, fail.elapsed_s)
                 self.net.update(self.estimator.bandwidth, outage=True)
@@ -284,9 +308,11 @@ class SplitRuntime:
             "link": self.link.counters(),
             "hops": [{
                 "hop": 0,
+                "wire_dtype": self.wire,
                 "attempts": self.hop_attempts,
                 "wire_bytes": self.hop_wire_bytes,
                 "goodput_bytes": self.hop_goodput_bytes,
+                "raw_bytes": self.hop_raw_bytes,
                 "retransmitted_bytes": (self.hop_wire_bytes
                                         - self.hop_goodput_bytes),
                 "est_bandwidth": self.estimator.bandwidth,
@@ -370,6 +396,11 @@ class ChainRuntime:
       else the plan's own ``microbatches`` field); clamped to the batch.
     merge_fallback: None (default) = merge allowed iff the merged stage
       fits the tier's memory budget; True/False forces the decision.
+    wire: per-hop boundary wire formats -- one policy string for every
+      hop or a K-1 sequence.  None resolves plan.wire_dtypes if the plan
+      carries them, else ``REPRO_LINK{k}_WIRE_DTYPE`` / ``REPRO_WIRE_
+      DTYPE`` per hop; ``follow`` ships the storage dtype (legacy path).
+      Indexed by ORIGINAL hop id, so merges keep surviving hops' formats.
     """
 
     def __init__(self, model: str | list, params, plan: ChainPlan,
@@ -378,6 +409,7 @@ class ChainRuntime:
                  links: list[FaultyLink] | None = None,
                  policy: RetryPolicy = RetryPolicy(),
                  backend: str | None = None, dtype: str | None = None,
+                 wire=None,
                  microbatches: int | None = None,
                  merge_fallback: bool | None = None,
                  estimator_alpha: float = 0.3,
@@ -416,6 +448,11 @@ class ChainRuntime:
         self.policy = policy
         self.backend = backend
         self.dtype = dtype
+        self._storage = conv_dtype(dtype)
+        if wire is None and plan.wire_dtypes:
+            wire = plan.wire_dtypes
+        self.wire_dtypes = resolve_chain_wire(wire, len(links),
+                                              self._storage)
         if microbatches is None:
             microbatches = int(os.environ.get("REPRO_CHAIN_MICROBATCH",
                                               plan.microbatches))
@@ -441,6 +478,7 @@ class ChainRuntime:
         self.hop_attempts = [0] * n_hops
         self.hop_wire_bytes = [0] * n_hops
         self.hop_goodput_bytes = [0] * n_hops
+        self.hop_raw_bytes = [0] * n_hops
         self.hop_merges = [0] * n_hops
 
     # -- stages --------------------------------------------------------
@@ -550,13 +588,20 @@ class ChainRuntime:
                 if layer == L:
                     break
                 hop_id = hops[s]
-                data, host = SplitRuntime._serialize(cur)
+                w = self.wire_dtypes[hop_id]
+                data, meta = encode_boundary(cur, w, backend=self.backend)
                 tx = max(link_free[hop_id], ready)
+                if w != self._storage:
+                    self.log.emit(ev.WIRE_ENCODE, tx,
+                                  what=f"hop{hop_id}@l={layer}", wire=w,
+                                  raw_bytes=meta.raw_bytes,
+                                  payload_bytes=len(data))
                 try:
                     out = send_with_retry(
                         self.links[hop_id], data, self.policy,
                         rng=self._jitter_rng, log=self.log,
-                        what=f"hop{hop_id}@l={layer}", at=tx)
+                        what=f"hop{hop_id}@l={layer}", at=tx,
+                        framed=meta.framed)
                     link_free[hop_id] = tx + out.elapsed_s
                     ready = tx + out.elapsed_s
                     attempts += out.attempts
@@ -566,9 +611,11 @@ class ChainRuntime:
                     self.hop_attempts[hop_id] += out.attempts
                     self.hop_wire_bytes[hop_id] += out.wire_bytes
                     self.hop_goodput_bytes[hop_id] += out.goodput_bytes
+                    self.hop_raw_bytes[hop_id] += meta.raw_bytes
                     self.estimators[hop_id].observe(out.goodput_bytes,
                                                     out.success_elapsed_s)
-                    cur = SplitRuntime._deserialize(out.payload, host)
+                    cur = decode_boundary(out.payload, meta,
+                                          backend=self.backend)
                     s += 1
                 except TransferFailed as fail:
                     t_fail = tx + fail.elapsed_s
@@ -579,6 +626,7 @@ class ChainRuntime:
                     wire += fail.wire_bytes
                     self.hop_attempts[hop_id] += fail.attempts
                     self.hop_wire_bytes[hop_id] += fail.wire_bytes
+                    self.hop_raw_bytes[hop_id] += meta.raw_bytes
                     self.estimators[hop_id].observe(0.0, fail.elapsed_s)
                     if self._merge_ok(tier_id, edges[s], edges[s + 2]):
                         self.log.emit(ev.STAGE_MERGE, t_fail,
@@ -644,9 +692,11 @@ class ChainRuntime:
             "microbatches": self.microbatches,
             "hops": [{
                 "hop": k,
+                "wire_dtype": self.wire_dtypes[k],
                 "attempts": self.hop_attempts[k],
                 "wire_bytes": self.hop_wire_bytes[k],
                 "goodput_bytes": self.hop_goodput_bytes[k],
+                "raw_bytes": self.hop_raw_bytes[k],
                 "retransmitted_bytes": (self.hop_wire_bytes[k]
                                         - self.hop_goodput_bytes[k]),
                 "merges": self.hop_merges[k],

@@ -13,11 +13,13 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import struct
 import zlib
 
 import numpy as np
 
-from repro.core.costs import FRAME_HEADER_BYTES
+from repro.core.costs import (FRAME_HEADER_BYTES, MULTIPART_BASE_BYTES,
+                              PART_HEADER_BYTES)
 from repro.runtime import events as ev
 from repro.runtime.events import EventLog
 from repro.runtime.faults import (ENV_PREFIX, FaultyLink, LinkDropped,
@@ -30,7 +32,71 @@ HEADER_BYTES = FRAME_HEADER_BYTES
 
 
 class ChecksumError(LinkError):
-    """Payload delivered but its crc32 did not match the header's."""
+    """Payload delivered but its crc32 did not match the header's.
+
+    ``part`` names the multipart frame the mismatch hit ("scales" /
+    "data" / "header") when the transfer was framed, else None -- the
+    chaos harness uses it to attribute quantized-frame corruption."""
+
+    part: str | None = None
+
+
+class FrameError(ValueError):
+    """A multipart buffer failed structural or per-part crc validation."""
+
+    def __init__(self, msg: str, part: str):
+        super().__init__(msg)
+        self.part = part
+
+
+def pack_frames(*parts: bytes) -> bytes:
+    """Frame N byte-strings as one payload, each with its own crc32.
+
+    Layout: ``u32 part-count | [u32 length, u32 crc32, bytes] * N``.
+    The int8 boundary codec sends (scales, data) through this, so a
+    single flipped byte anywhere is caught -- and attributed -- by
+    ``unpack_frames``.  The overhead constants (``MULTIPART_BASE_BYTES``
+    + ``PART_HEADER_BYTES`` per part) live in ``core.costs`` so the
+    optimiser prices exactly these bytes."""
+    buf = [struct.pack("<I", len(parts))]
+    for p in parts:
+        buf.append(struct.pack("<II", len(p), zlib.crc32(p)))
+        buf.append(p)
+    return b"".join(buf)
+
+
+def unpack_frames(buf: bytes, labels: tuple[str, ...] = ()
+                  ) -> tuple[bytes, ...]:
+    """Split and verify a ``pack_frames`` buffer.
+
+    Raises ``FrameError`` naming the corrupted part (``labels[i]`` when
+    given, else ``part{i}``; structural damage = "header")."""
+    base = MULTIPART_BASE_BYTES
+    if len(buf) < base:
+        raise FrameError("multipart buffer shorter than its header",
+                         "header")
+    (count,) = struct.unpack_from("<I", buf, 0)
+    if labels and count != len(labels):
+        raise FrameError(
+            f"expected {len(labels)} parts, header says {count}", "header")
+    off = base
+    parts = []
+    for i in range(count):
+        if off + PART_HEADER_BYTES > len(buf):
+            raise FrameError(f"part {i} header out of bounds", "header")
+        length, crc = struct.unpack_from("<II", buf, off)
+        off += PART_HEADER_BYTES
+        if off + length > len(buf):
+            raise FrameError(f"part {i} length out of bounds", "header")
+        part = buf[off:off + length]
+        off += length
+        label = labels[i] if i < len(labels) else f"part{i}"
+        if zlib.crc32(part) != crc:
+            raise FrameError(f"crc32 mismatch in part {label!r}", label)
+        parts.append(part)
+    if off != len(buf):
+        raise FrameError("trailing bytes after last part", "header")
+    return tuple(parts)
 
 
 class TransferFailed(RuntimeError):
@@ -118,7 +184,8 @@ def send_with_retry(link: FaultyLink, payload: bytes,
                     rng: np.random.Generator | None = None,
                     log: EventLog | None = None,
                     what: str = "boundary",
-                    at: float | None = None) -> TransferOutcome:
+                    at: float | None = None,
+                    framed: tuple[str, ...] | None = None) -> TransferOutcome:
     """Deliver ``payload`` over ``link`` or raise ``TransferFailed``.
 
     rng: seeded generator for backoff jitter (None = no jitter).
@@ -129,7 +196,11 @@ def send_with_retry(link: FaultyLink, payload: bytes,
       it directly -- exactly the historical behaviour.  The chain runtime
       passes its pipeline-scheduled send time: the retry loop then keeps
       a local time cursor (the shared clock only ratchets forward via
-      ``send_at``), so concurrent hops don't steal each other's time."""
+      ``send_at``), so concurrent hops don't steal each other's time.
+    framed: part labels when ``payload`` is a ``pack_frames`` buffer
+      (e.g. ``("scales", "data")`` for int8 boundaries).  Integrity then
+      comes from the embedded per-part crc32s instead of the outer
+      checksum, so a corruption event names the part it hit."""
     log = log if log is not None else EventLog()
     crc = zlib.crc32(payload)
     size = len(payload) + HEADER_BYTES
@@ -146,7 +217,15 @@ def send_with_retry(link: FaultyLink, payload: bytes,
                                                   policy.timeout_s)
             else:
                 delivered, elapsed = link.send(payload, policy.timeout_s)
-            if zlib.crc32(delivered) != crc:
+            if framed is not None:
+                try:
+                    unpack_frames(delivered, framed)
+                except FrameError as fe:
+                    err = ChecksumError(
+                        f"{fe} on attempt {attempt}", elapsed)
+                    err.part = fe.part
+                    raise err from fe
+            elif zlib.crc32(delivered) != crc:
                 raise ChecksumError(
                     f"crc32 mismatch on attempt {attempt}", elapsed)
             t += elapsed
@@ -158,8 +237,10 @@ def send_with_retry(link: FaultyLink, payload: bytes,
                 wire_bytes=wire_bytes, goodput_bytes=size)
         except LinkError as e:
             t += e.elapsed_s
+            part = getattr(e, "part", None)
             log.emit(_FAIL_KINDS[type(e)], t, what=what,
-                     attempt=attempt, elapsed_s=e.elapsed_s)
+                     attempt=attempt, elapsed_s=e.elapsed_s,
+                     **({"part": part} if part else {}))
             if attempt == policy.max_attempts:
                 log.emit(ev.GIVE_UP, t, what=what, attempts=attempt)
                 raise TransferFailed(

@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the int8 boundary quantization codec.
+
+Headline invariants, for ANY float tensor:
+
+* dequantize(quantize(x)) is within half a quantization step of x, per
+  channel (the symmetric-absmax error bound the cost model's accuracy
+  story rests on);
+* values already on a channel's quantization grid survive the round trip
+  exactly;
+* all-zero channels are safe (scale 1.0, exact zeros back);
+* float wire formats (fp32, and bf16 on bf16-stored tensors) round-trip
+  bit-identically -- the wire tier is invisible unless it re-encodes.
+
+Kept separate from tests/test_wire_quant.py so environments without
+``hypothesis`` (dev-only dependency) still run the deterministic suite."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.quant import (boundary_roundtrip,  # noqa: E402
+                                 dequantize_jnp, quantize_jnp)
+
+# Bounded, finite floats: the boundary activations the codec ever sees
+# (post conv/relu/pool), not inf/nan adversaria.
+ELEMS = st.floats(min_value=-1e4, max_value=1e4, width=32)
+
+
+def _tensors(min_c=1, max_c=6, max_n=8):
+    """(C, N) float32 arrays: channel-major boundary slabs."""
+    return st.tuples(
+        st.integers(min_c, max_c), st.integers(1, max_n)).flatmap(
+        lambda cn: st.lists(
+            st.lists(ELEMS, min_size=cn[1], max_size=cn[1]),
+            min_size=cn[0], max_size=cn[0])).map(
+        lambda rows: np.asarray(rows, np.float32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(_tensors())
+def test_roundtrip_error_within_half_step(x):
+    xj = jnp.asarray(x)[None]                      # (1, C, N): channel axis 1
+    q, scales = quantize_jnp(xj, axis=1)
+    y = np.asarray(dequantize_jnp(q, scales, axis=1))[0]
+    s = np.asarray(scales)
+    # |dequant - x| <= scale/2 per channel (+ float slack)
+    err = np.abs(y - x).max(axis=1)
+    assert np.all(err <= s / 2 + 1e-4 * np.maximum(s, 1.0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_grid_values_survive_exactly(c, n, seed):
+    # a tensor already on the quantization grid: k * scale with |k| <= 127
+    # and one k = 127 per channel, so the recomputed absmax/127 recovers
+    # the scale (up to 1 ulp) and every point rounds back to its own k
+    rng = np.random.default_rng(seed)
+    scales = np.exp(rng.uniform(-6, 6, size=c)).astype(np.float32)
+    k = rng.integers(-127, 128, size=(c, n)).astype(np.float32)
+    k[:, 0] = 127.0
+    grid = (k * scales[:, None]).astype(np.float32)
+    y = np.asarray(boundary_roundtrip(jnp.asarray(grid)[None], "int8"))[0]
+    np.testing.assert_allclose(y, grid, rtol=1e-5, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 16))
+def test_zero_channels_are_safe(c, n):
+    x = jnp.zeros((1, c, n), jnp.float32)
+    q, scales = quantize_jnp(x, axis=1)
+    np.testing.assert_array_equal(np.asarray(scales), np.ones(c))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_jnp(q, scales, axis=1)), 0.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_tensors())
+def test_float_wire_roundtrips_bit_identical(x):
+    xj = jnp.asarray(x)[None]
+    np.testing.assert_array_equal(
+        np.asarray(boundary_roundtrip(xj, "fp32")), np.asarray(xj))
+    xb = xj.astype(jnp.bfloat16)
+    got = boundary_roundtrip(xb, "bf16")
+    np.testing.assert_array_equal(
+        np.asarray(got.astype(jnp.float32)),
+        np.asarray(xb.astype(jnp.float32)))
