@@ -57,6 +57,11 @@ def main() -> None:
         sections["boundary_quant"] = boundary_quant_bench.run_all
     except ImportError:
         pass
+    try:
+        from benchmarks import serving_bench
+        sections["serving"] = serving_bench.run_all
+    except ImportError:
+        pass
 
     emit([], header=True)
     ran = []

@@ -1,0 +1,207 @@
+"""Serving throughput: the CNN split-serving engine under offered load.
+
+Drives ``serving.cnn_engine.CnnServingEngine`` with Poisson-ish request
+streams (deterministic seeded arrivals) at several offered loads and
+measures, on the virtual clock:
+
+* requests/sec and p50/p99 end-to-end latency, **pipelined vs
+  sequential** execution -- the headline: cross-request pipelining keeps
+  client, link, and server tiers concurrently busy, so throughput rises
+  well before latency does;
+* the same pair under a 30%-drop fault profile -- throughput under
+  chaos, riding the runtime's retry/merge/re-pick ladder;
+* a bit-identity audit on the fault-free cells: every served request's
+  logits must equal ``apply_split`` of that sample alone (the engine's
+  one-request-one-microbatch contract).
+
+Writes ``BENCH_serving.json`` (``BENCH_serving_smoke.json`` with
+``--smoke``) to benchmarks/out/ and prints the harness CSV rows.
+Virtual-clock timing means the numbers are schedules, not machine noise
+-- stable across hosts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, time_us
+from repro.core.hardware import paper_chain
+from repro.models import cnn as cnn_lib
+from repro.models.cnn import apply_split
+from repro.runtime.faults import FaultSpec, FaultyLink, VirtualClock
+from repro.runtime.transfer import RetryPolicy
+from repro.serving.cnn_engine import CnnServingEngine
+
+MODEL = "alexnet"
+# Per-hop wire times on paper_chain(3) are ~ms; the default 5 s timeout
+# would make every 30%-drop retry catastrophic.  Budget ~5 attempts
+# with a timeout that caps a lost attempt at a few wire times.
+POLICY = RetryPolicy(max_attempts=5, timeout_s=0.25, backoff_base_s=0.01)
+IN_SHAPE = (3, 64, 64)
+TIERS = 3
+DROP_RATE = 0.3
+# offered load as a multiple of one batch-4 request's service rate
+LOADS = (0.5, 1.0, 2.0)
+LOADS_SMOKE = (1.0,)
+N_REQUESTS = 64
+N_REQUESTS_SMOKE = 16
+
+
+def _params():
+    layers = cnn_lib.CNN_MODELS[MODEL]
+    return layers, cnn_lib.init_cnn(jax.random.PRNGKey(0), layers,
+                                    in_shape=IN_SHAPE)
+
+
+def _links(drop: float, seed: int = 0) -> list[FaultyLink]:
+    hw = paper_chain(TIERS)
+    clock = VirtualClock()
+    faults = FaultSpec(drop_rate=drop) if drop else FaultSpec()
+    return [FaultyLink(link.bandwidth, faults=faults, seed=seed + k,
+                       clock=clock)
+            for k, link in enumerate(hw.links)]
+
+
+def _service_rate(params) -> float:
+    """Served requests/sec of one isolated batch-4 pipelined pass --
+    the normalizer that turns LOADS into arrival rates."""
+    layers, p = params
+    eng = CnnServingEngine({MODEL: (layers, p)}, hw=paper_chain(TIERS),
+                           max_batch=4, pipelined=True, policy=POLICY)
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        eng.submit(rng.normal(size=IN_SHAPE).astype(np.float32), at=0.0)
+    eng.run_until_idle()
+    return eng.stats()["requests_per_s"]
+
+
+def _drive(params, *, pipelined: bool, drop: float, rate: float,
+           n_requests: int, seed: int = 0) -> dict:
+    layers, p = params
+    eng = CnnServingEngine(
+        {MODEL: (layers, p)}, hw=paper_chain(TIERS), max_batch=4,
+        max_queue=max(64, n_requests), pipelined=pipelined,
+        links=_links(drop, seed=seed), policy=POLICY, jitter_seed=seed)
+    rng = np.random.default_rng(seed)
+    # exponential inter-arrivals at the offered rate (seeded: the same
+    # stream hits the pipelined and sequential engines)
+    t = 0.0
+    arrivals = []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        arrivals.append(t)
+    xs = [rng.normal(size=IN_SHAPE).astype(np.float32)
+          for _ in range(n_requests)]
+    reqs = [eng.submit(x, at=a) for x, a in zip(xs, arrivals)]
+    eng.run_until_idle()
+    s = eng.stats()
+    return {"stats": s, "requests": reqs, "samples": xs, "engine": eng}
+
+
+def _bit_identity(run: dict) -> bool:
+    """Every served request's logits == apply_split of that sample alone
+    at the engine's chosen first cut (fault-free path only)."""
+    eng = run["engine"]
+    layers, p = next(iter(eng._models.values()))
+    ok = True
+    for req, x in zip(run["requests"], run["samples"]):
+        if req.status != "served":
+            continue
+        cuts = eng._buckets[req.bucket].rt.plan.cuts
+        ref, _ = apply_split(layers, p, x[None], cuts[0] if cuts else 0)
+        ok = ok and bool(jnp.array_equal(req.logits, ref[0]))
+    return ok
+
+
+def run_all(smoke: bool = False) -> list[tuple]:
+    loads = LOADS_SMOKE if smoke else LOADS
+    n_req = N_REQUESTS_SMOKE if smoke else N_REQUESTS
+    params = _params()
+    base_rate = _service_rate(params)
+    cells = []
+
+    def build():
+        for profile, drop in (("clean", 0.0), ("drop30", DROP_RATE)):
+            for load in loads:
+                rate = base_rate * load
+                pair = {}
+                for mode, pipelined in (("pipelined", True),
+                                        ("sequential", False)):
+                    run = _drive(params, pipelined=pipelined, drop=drop,
+                                 rate=rate, n_requests=n_req)
+                    s = run["stats"]
+                    pair[mode] = {
+                        "requests_per_s": s["requests_per_s"],
+                        "latency_p50_s": s["latency_p50_s"],
+                        "latency_p99_s": s["latency_p99_s"],
+                        "served": s["served"],
+                        "failed": s["failed"],
+                        "batches": s["batches"],
+                        "avg_batch_size": s["avg_batch_size"],
+                        "repicks": s["repicks"],
+                        "merges": s["merges"],
+                        "hop_goodput_Bps": [h["goodput_Bps"]
+                                            for h in s["hops"]],
+                    }
+                    if drop == 0.0 and pipelined:
+                        # the serving path's contract; the sequential
+                        # baseline fuses batches (different last-ulp)
+                        pair[mode]["bit_identical"] = _bit_identity(run)
+                seq_rps = pair["sequential"]["requests_per_s"]
+                cells.append({
+                    "model": MODEL, "tiers": TIERS, "profile": profile,
+                    "offered_load": load, "offered_rate_rps": rate,
+                    "n_requests": n_req,
+                    "pipelined": pair["pipelined"],
+                    "sequential": pair["sequential"],
+                    "pipeline_speedup":
+                        pair["pipelined"]["requests_per_s"] / seq_rps
+                        if seq_rps > 0 else float("inf"),
+                })
+
+    us = time_us(build, repeats=1, warmup=0)
+    out = {"model": MODEL, "in_shape": list(IN_SHAPE), "tiers": TIERS,
+           "max_batch": 4, "base_service_rate_rps": base_rate,
+           "drop_rate": DROP_RATE, "cells": cells}
+    name = "BENCH_serving_smoke.json" if smoke else "BENCH_serving.json"
+    path = save_json("", name, out)
+    rows = []
+    for c in cells:
+        pi = c["pipelined"]
+        derived = (f"rps={pi['requests_per_s']:.1f}"
+                   f" p50={pi['latency_p50_s']:.4f}s"
+                   f" p99={pi['latency_p99_s']:.4f}s"
+                   f" speedup={c['pipeline_speedup']:.2f}x"
+                   f" served={pi['served']}/{c['n_requests']}")
+        if "bit_identical" in pi:
+            derived += f" bitid={pi['bit_identical']}"
+        if c["profile"] != "clean":
+            derived += f" repicks={pi['repicks']} merges={pi['merges']}"
+        rows.append((
+            f"serving/{c['model']}.chain{c['tiers']}.{c['profile']}"
+            f".load{c['offered_load']:g}",
+            round(pi["latency_p50_s"] * 1e6, 1), derived))
+    clean = [c for c in cells if c["profile"] == "clean"]
+    min_speedup = min(c["pipeline_speedup"] for c in clean)
+    bit_ok = all(c["pipelined"].get("bit_identical") for c in clean)
+    rows.append((f"serving/summary[{len(cells)}cells]", round(us, 1),
+                 f"min_clean_speedup={min_speedup:.2f}x"
+                 f" bitid={bit_ok} -> {path}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    from benchmarks.common import emit
+    emit([], header=True)
+    emit(run_all(smoke=args.smoke))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

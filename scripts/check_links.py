@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links in README.md and docs/ resolve.
+
+Usage (from anywhere): python scripts/check_links.py
+Exit 1 listing every broken link.  External (http/https/mailto) links
+and pure #anchors are skipped -- this guards the file-path links that
+rot when files move.  Stdlib-only; the CI docs job runs it.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# [text](target) -- excluding images' inner ! is irrelevant, same rule
+_LINK_RE = re.compile(r'\[[^\]]*\]\(([^)\s]+)\)')
+
+
+def md_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(files: list[Path]) -> list[str]:
+    broken = []
+    for f in files:
+        for m in _LINK_RE.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (f.parent / path).resolve()
+            if not resolved.is_relative_to(REPO):
+                continue    # web-relative (e.g. the CI badge), not a file
+            if not resolved.exists():
+                broken.append(
+                    f"{f.relative_to(REPO)}: broken link -> {target}")
+    return broken
+
+
+def main() -> int:
+    files = md_files()
+    broken = check(files)
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'all links resolve' if not broken else f'{len(broken)} broken'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Render docs/knobs.md from the knob registry in core/knobs.py.
+
+Usage (from the repo root):
+    PYTHONPATH=src python scripts/gen_knobs.py           # (re)write
+    PYTHONPATH=src python scripts/gen_knobs.py --check   # diff, exit 1
+                                                         # if stale
+
+The --check mode is what the CI docs job runs; tests/test_knobs.py runs
+the same comparison in tier-1.  Stdlib-only -- no jax needed.
+"""
+from __future__ import annotations
+
+import argparse
+import difflib
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# Load knobs.py by path: importing the repro.core package would pull in
+# the whole numpy/jax stack, which the CI docs job deliberately lacks.
+_spec = importlib.util.spec_from_file_location(
+    "repro_knobs", REPO / "src" / "repro" / "core" / "knobs.py")
+_mod = importlib.util.module_from_spec(_spec)
+sys.modules[_spec.name] = _mod  # dataclasses resolves types via sys.modules
+_spec.loader.exec_module(_mod)
+render_markdown = _mod.render_markdown
+
+OUT = REPO / "docs" / "knobs.md"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 (with a diff) if docs/knobs.md is stale "
+                         "instead of rewriting it")
+    args = ap.parse_args()
+    want = render_markdown()
+    if args.check:
+        have = OUT.read_text() if OUT.exists() else ""
+        if have == want:
+            print(f"{OUT.relative_to(REPO)} is up to date")
+            return 0
+        sys.stderr.writelines(difflib.unified_diff(
+            have.splitlines(keepends=True), want.splitlines(keepends=True),
+            fromfile=str(OUT.relative_to(REPO)), tofile="generated"))
+        sys.stderr.write(
+            f"\n{OUT.relative_to(REPO)} is stale: regenerate with "
+            f"`PYTHONPATH=src python scripts/gen_knobs.py`\n")
+        return 1
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(want)
+    print(f"wrote {OUT.relative_to(REPO)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

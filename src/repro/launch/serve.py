@@ -31,6 +31,60 @@ from repro.models.profiles import transformer_profile
 from repro.serving.engine import Engine
 
 
+def serve_cnn_stream(args) -> None:
+    """``--cnn --concurrency N``: a stream of N single-sample requests
+    through the batched split-serving engine (``serving.cnn_engine``):
+    bounded queue, (model, resolution, dtype, wire) batch buckets,
+    cross-request pipelining on the virtual clock (``--no-pipeline``
+    for the sequential baseline)."""
+    from repro.core import paper_chain
+    from repro.models import cnn as cnn_lib
+    from repro.runtime import FaultSpec, RetryPolicy
+    from repro.runtime.faults import chain_links_from_env
+    from repro.serving.cnn_engine import CnnServingEngine
+
+    import os
+    num_tiers = args.tiers if args.tiers is not None \
+        else int(os.environ.get("REPRO_CHAIN_TIERS", 2))
+    hw = paper_chain(num_tiers)
+    links = chain_links_from_env([link.bandwidth for link in hw.links])
+    if args.drop:
+        for link in links:
+            link.faults = FaultSpec(drop_rate=args.drop)
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0),
+                              cnn_lib.CNN_MODELS[args.cnn])
+    eng = CnnServingEngine(
+        {args.cnn: params}, hw=hw, max_batch=args.max_batch,
+        pipelined=False if args.no_pipeline else None, dtype=args.dtype,
+        wire=args.wire_dtype, links=links, policy=RetryPolicy.from_env())
+    rng = np.random.default_rng(0)
+    for i in range(args.concurrency):
+        x = rng.normal(size=cnn_lib.INPUT_SHAPE).astype(np.float32)
+        eng.submit(x, args.cnn, at=0.0)
+    t0 = time.perf_counter()
+    eng.run_until_idle()
+    dt = time.perf_counter() - t0
+    s = eng.stats()
+    mode = "pipelined" if s["pipelined"] else "sequential"
+    print(f"served {s['served']}/{s['submitted']} requests "
+          f"({mode}, {s['batches']} batches of "
+          f"~{s['avg_batch_size']:.1f}) in {dt:.1f}s wall / "
+          f"{s['virtual_span_s']:.4f}s virtual "
+          f"({s['requests_per_s']:.1f} req/s virtual; "
+          f"p50={s['latency_p50_s'] * 1e3:.1f}ms "
+          f"p99={s['latency_p99_s'] * 1e3:.1f}ms) "
+          f"repicks={s['repicks']} merges={s['merges']}")
+    for h in s["hops"]:
+        link_c = h["link"]
+        print(f"  hop{h['hop']}: wire={h['wire_dtype']} "
+              f"attempts={h['attempts']} sent={h['wire_bytes']}B "
+              f"goodput={h['goodput_Bps']:.3g}B/s "
+              f"retx={h['retransmitted_bytes']}B "
+              f"degradation={h['degradation']:.2f} "
+              f"({link_c['dropped']} dropped / {link_c['timeouts']} "
+              f"timeouts)")
+
+
 def serve_cnn(args) -> None:
     """Fault-tolerant CNN chain serving (the paper's actual workload).
 
@@ -123,6 +177,14 @@ def main():
                     help="--cnn only: request batch size (microbatching "
                          "splits this)")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="--cnn only: serve a stream of N concurrent "
+                         "single-sample requests through the batched "
+                         "split-serving engine instead of synchronous "
+                         "whole-batch calls")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="--cnn --concurrency only: sequential baseline "
+                         "(no cross-request pipelining)")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--plan-split", action="store_true")
@@ -137,7 +199,10 @@ def main():
     args = ap.parse_args()
 
     if args.cnn:
-        serve_cnn(args)
+        if args.concurrency:
+            serve_cnn_stream(args)
+        else:
+            serve_cnn(args)
         return
 
     cfg = all_configs()[args.arch].reduced()

@@ -10,9 +10,10 @@ from repro.runtime.faults import (FaultSpec, FaultyLink, LinkDropped,
                                   VirtualClock, chain_links_from_env,
                                   link_from_env, parse_outages)
 from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
-from repro.runtime.runtime import (ChainInferenceResult, ChainRuntime,
-                                   InferenceResult, SplitRuntime,
-                                   SplitUnrecoverable, microbatch_slices)
+from repro.runtime.runtime import (ChainInferenceResult, ChainResources,
+                                   ChainRuntime, InferenceResult,
+                                   SplitRuntime, SplitUnrecoverable,
+                                   microbatch_slices)
 from repro.runtime.transfer import (ChecksumError, FrameError, RetryPolicy,
                                     TransferFailed, TransferOutcome,
                                     pack_frames, send_with_retry,
@@ -26,8 +27,9 @@ __all__ = [
     "LinkTimeout", "VirtualClock", "chain_links_from_env", "link_from_env",
     "parse_outages",
     "EwmaLinkEstimator", "chain_estimators",
-    "ChainInferenceResult", "ChainRuntime", "InferenceResult",
-    "SplitRuntime", "SplitUnrecoverable", "microbatch_slices",
+    "ChainInferenceResult", "ChainResources", "ChainRuntime",
+    "InferenceResult", "SplitRuntime", "SplitUnrecoverable",
+    "microbatch_slices",
     "ChecksumError", "FrameError", "RetryPolicy", "TransferFailed",
     "TransferOutcome", "pack_frames", "send_with_retry", "unpack_frames",
     "BoundaryMeta", "decode_boundary", "encode_boundary",

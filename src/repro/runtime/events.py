@@ -29,6 +29,8 @@ STAGE_MERGE = "stage_merge"          # collapsed a cut onto the upstream tier
 REPICK = "repick"                    # re-picked split from Pareto front
 PROACTIVE_RESPLIT = "proactive_resplit"  # EWMA-triggered re-split
 UNRECOVERABLE = "unrecoverable"      # no fallback or re-pick remained
+QUEUE_SHED = "queue_shed"            # serving engine rejected: queue full
+DEADLINE_EXPIRED = "deadline_expired"  # request missed its deadline
 
 
 @dataclasses.dataclass(frozen=True)

@@ -343,6 +343,35 @@ def microbatch_slices(batch: int, microbatches: int
     return [(int(offsets[i]), int(offsets[i + 1])) for i in range(M)]
 
 
+class ChainResources:
+    """Persistent per-tier / per-link next-free times on the virtual
+    clock, shared across requests (and across the per-bucket runtimes of
+    a serving engine).
+
+    ``ChainRuntime.infer`` normally resets its resource model per
+    request, so consecutive requests serialise completely: request i+1's
+    client stage cannot start before request i's makespan.  Passing one
+    ``ChainResources`` instance to the runtime makes tier/link
+    availability *outlive* the request: while request i's boundary
+    payload is in flight on hop k, request i+1's client stage runs on
+    tier 0 -- the cross-request generalisation of the microbatch
+    pipeline, priced on the same virtual clock.  Indexed by ORIGINAL
+    tier/hop ids (merges never renumber)."""
+
+    def __init__(self, num_tiers: int, num_links: int, start: float = 0.0):
+        if num_links != num_tiers - 1:
+            raise ValueError(
+                f"{num_tiers} tiers need {num_tiers - 1} links, "
+                f"got {num_links}")
+        self.tier_free = [float(start)] * num_tiers
+        self.link_free = [float(start)] * num_links
+
+    @property
+    def busy_until(self) -> float:
+        """Latest committed claim on any tier or link."""
+        return max(self.tier_free + self.link_free)
+
+
 @dataclasses.dataclass(frozen=True)
 class ChainInferenceResult:
     """One request's outcome through the N-stage pipeline."""
@@ -358,6 +387,10 @@ class ChainInferenceResult:
     goodput_bytes: int
     microbatches: int              # M actually used (<= batch size)
     events: tuple[Event, ...]
+    # per-microbatch completion times on the virtual clock; the serving
+    # engine maps one request to one microbatch, so request i's own
+    # end-to-end latency is microbatch_finish_s[i], not the batch makespan
+    microbatch_finish_s: tuple[float, ...] = ()
 
     @property
     def retransmitted_bytes(self) -> int:
@@ -401,6 +434,22 @@ class ChainRuntime:
       carries them, else ``REPRO_LINK{k}_WIRE_DTYPE`` / ``REPRO_WIRE_
       DTYPE`` per hop; ``follow`` ships the storage dtype (legacy path).
       Indexed by ORIGINAL hop id, so merges keep surviving hops' formats.
+    resources: optional shared ``ChainResources``.  Default None keeps
+      the legacy per-request resource model (every request starts from a
+      fresh chain).  With an instance, tier/link next-free times persist
+      across requests -- and across every runtime holding the same
+      instance -- so back-to-back requests overlap on the pipeline
+      exactly like microbatches of one request do (the serving engine's
+      cross-request pipelining; pass ``infer(x, at=arrival)``).
+    estimators: optional shared per-hop EWMA estimator list (the serving
+      engine shares one set across its per-bucket runtimes: the hops are
+      the same physical links, so bandwidth evidence should pool).
+    profile_batch: how many samples ``profile``'s byte/flop terms
+      describe.  Default None keeps the legacy rule (the profile covers
+      the whole request batch; each of M microbatches costs 1/M of it);
+      an explicit value makes microbatch compute time proportional to
+      the slice's own sample count -- a per-sample profile
+      (``profile_batch=1``) then prices variable-size batches correctly.
     """
 
     def __init__(self, model: str | list, params, plan: ChainPlan,
@@ -415,6 +464,9 @@ class ChainRuntime:
                  estimator_alpha: float = 0.3,
                  resplit_ratio: float = 2.0,
                  jitter_seed: int = 0,
+                 resources: ChainResources | None = None,
+                 estimators: list[EwmaLinkEstimator] | None = None,
+                 profile_batch: int | None = None,
                  log: EventLog | None = None):
         if isinstance(hw, TwoTierHardware):
             hw = chain_of(hw)
@@ -462,8 +514,22 @@ class ChainRuntime:
         self.microbatches = microbatches
         self.merge_fallback = merge_fallback
         self.resplit_ratio = float(resplit_ratio)
-        self.estimators = chain_estimators(
-            [link.bandwidth for link in hw.links], alpha=estimator_alpha)
+        if resources is not None and \
+                len(resources.link_free) != len(self.links):
+            raise ValueError(
+                f"resources model {len(resources.link_free)} links, "
+                f"chain has {len(self.links)}")
+        self.resources = resources
+        if profile_batch is not None and profile_batch < 1:
+            raise ValueError(
+                f"profile_batch must be >= 1, got {profile_batch}")
+        self.profile_batch = profile_batch
+        if estimators is not None and len(estimators) != len(self.links):
+            raise ValueError(
+                f"{len(estimators)} estimators for {len(self.links)} links")
+        self.estimators = estimators if estimators is not None \
+            else chain_estimators(
+                [link.bandwidth for link in hw.links], alpha=estimator_alpha)
         self.log = log if log is not None else EventLog()
         self._jitter_rng = np.random.default_rng(jitter_seed)
         self._cm = profile.cum_mem()
@@ -533,7 +599,7 @@ class ChainRuntime:
             self.n_proactive += 1
 
     # -- the request loop ----------------------------------------------
-    def infer(self, x) -> ChainInferenceResult:
+    def infer(self, x, *, at: float | None = None) -> ChainInferenceResult:
         """Run one request through the chain (or raise
         SplitUnrecoverable).
 
@@ -542,13 +608,20 @@ class ChainRuntime:
         waits on its own upstream ops and on earlier microbatches'
         claims of the same resource (FIFO per tier/link), so m-major
         traversal reproduces the chronological schedule.  Fault draws
-        happen per hop in microbatch order (deterministic per seed)."""
+        happen per hop in microbatch order (deterministic per seed).
+
+        ``at`` schedules the request's arrival on the virtual clock
+        (default: now).  With a shared ``ChainResources``, an arrival
+        earlier than the previous request's makespan overlaps it --
+        the serving engine's cross-request pipelining; stages still
+        start no earlier than both the arrival and the tier's previous
+        claim, so the schedule stays FIFO-valid per resource."""
         self.n_requests += 1
         mark = len(self.log)
         self._maybe_proactive_repick()
         planned_cuts = self.plan.cuts
         L = len(self.layers)
-        t0 = self.clock.now
+        t0 = self.clock.now if at is None else float(at)
         batch = int(x.shape[0])
         slices = microbatch_slices(batch, self.microbatches)
         M = len(slices)
@@ -558,8 +631,12 @@ class ChainRuntime:
         edges = list(self.plan.edges)
         tiers = list(range(len(edges) - 1))
         hops = list(range(len(edges) - 2))
-        tier_free = [t0] * self.hw.num_tiers
-        link_free = [t0] * len(self.links)
+        if self.resources is None:           # per-request resource model
+            tier_free = [t0] * self.hw.num_tiers
+            link_free = [t0] * len(self.links)
+        else:                                # persists across requests
+            tier_free = self.resources.tier_free
+            link_free = self.resources.link_free
 
         attempts = 0
         retries = 0
@@ -568,6 +645,7 @@ class ChainRuntime:
         tried: tuple[tuple[int, ...], ...] = ()
         repicked = False
         outs = []
+        mb_finish: list[float] = []
         finish = t0
         for m in range(M):
             x_m = x[slices[m][0]:slices[m][1]]
@@ -579,7 +657,17 @@ class ChainRuntime:
                 tier_id = tiers[s]
                 stop = edges[s + 1]
                 t_start = max(tier_free[tier_id], ready)
-                dt = self._stage_seconds(tier_id, layer, stop) / M
+                # Legacy: the profile describes the WHOLE batch, so each
+                # of the M microbatches costs 1/M of it.  A serving
+                # engine plans per sample (profile_batch=1) and then
+                # dispatches variable-size batches, so its microbatch
+                # cost scales with the slice's own sample count instead.
+                if self.profile_batch is None:
+                    dt = self._stage_seconds(tier_id, layer, stop) / M
+                else:
+                    size = slices[m][1] - slices[m][0]
+                    dt = self._stage_seconds(tier_id, layer, stop) \
+                        * (size / self.profile_batch)
                 if stop > layer:
                     cur = self._run(cur, layer, stop)
                 tier_free[tier_id] = t_start + dt
@@ -665,6 +753,7 @@ class ChainRuntime:
                     s = 0
                     ready = t_fail
             outs.append(cur)
+            mb_finish.append(ready)
             finish = max(finish, ready)
         self.clock.advance_to(finish)
         logits = outs[0] if M == 1 else jnp.concatenate(outs, axis=0)
@@ -677,7 +766,8 @@ class ChainRuntime:
             merged_hops=merged, attempts=attempts,
             chain_elapsed_s=finish - t0, wire_bytes=wire,
             goodput_bytes=goodput, microbatches=M,
-            events=tuple(self.log.since(mark)))
+            events=tuple(self.log.since(mark)),
+            microbatch_finish_s=tuple(mb_finish))
 
     # -- reporting ------------------------------------------------------
     def stats(self) -> dict:

@@ -1,0 +1,292 @@
+"""Batched CNN split-serving engine: packing, pipelining, backpressure,
+deadlines, fault recovery mid-stream, and per-request bit-identity.
+
+Deterministic: all timing is on the shared virtual clock, faults come
+from seeded outage windows (same idiom as tests/test_chain_runtime.py),
+so every schedule and recovery sequence is exact per seed."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import paper_chain, smartsplit
+from repro.models import cnn as cnn_lib
+from repro.models.cnn import avgpool, conv, linear, maxpool, relu
+from repro.models.profiles import cnn_profile
+from repro.runtime import (FaultSpec, FaultyLink, RetryPolicy,
+                           SplitRuntime, VirtualClock, events)
+from repro.serving.cnn_engine import CnnRequest, CnnServingEngine, \
+    QueueFullError
+
+TINY_LAYERS = [conv(8, 3, 1, 1), relu(), maxpool(2, 2),
+               conv(16, 3, 1, 1), relu(), avgpool(2), linear(10)]
+TINY_SHAPE = (3, 16, 16)
+TINY_SHAPE_B = (3, 24, 24)      # second resolution, same params (GAP-free
+                                # but avgpool(2) fixes the linear fan-in)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), TINY_LAYERS,
+                              TINY_SHAPE)
+    rng = np.random.default_rng(0)
+    xs = [np.asarray(rng.normal(size=TINY_SHAPE), np.float32)
+          for _ in range(16)]
+    return params, xs
+
+
+def _engine(params, *, tiers=3, links=None, **kw):
+    kw.setdefault("policy", RetryPolicy(max_attempts=2, timeout_s=0.05,
+                                        backoff_base_s=0.005))
+    return CnnServingEngine({"tiny": (TINY_LAYERS, params)},
+                            hw=paper_chain(tiers), links=links, **kw)
+
+
+def _links(hw, seed=0, fault_hop=None, spec=None):
+    clock = VirtualClock()
+    return [FaultyLink(link.bandwidth, clock=clock, seed=seed + k,
+                       faults=spec if k == fault_hop else FaultSpec())
+            for k, link in enumerate(hw.links)]
+
+
+def _ref(params, x1):
+    """Single-sample single-device reference (split placement cannot
+    change numerics, so this is the apply_split reference too)."""
+    return np.asarray(cnn_lib.apply_cnn(TINY_LAYERS, params, x1[None]))[0]
+
+
+# ---------------------------------------------------------------------------
+# Degeneracy + bit-identity
+# ---------------------------------------------------------------------------
+def test_single_request_bitwise_equals_split_runtime(tiny):
+    """One submitted request == a direct SplitRuntime run, bitwise."""
+    params, xs = tiny
+    eng = _engine(params, tiers=2)
+    req = eng.submit(xs[0])
+    eng.run_until_idle()
+    assert req.status == "served"
+
+    prof = cnn_profile("tiny", in_shape=TINY_SHAPE, layers=TINY_LAYERS)
+    from repro.core import PAPER_ENV_J6
+    plan = smartsplit(prof, PAPER_ENV_J6)
+    srt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6)
+    direct = srt.infer(xs[0][None])
+    np.testing.assert_array_equal(np.asarray(req.logits),
+                                  np.asarray(direct.logits)[0])
+    np.testing.assert_array_equal(np.asarray(req.logits),
+                                  _ref(params, xs[0]))
+
+
+def test_batched_requests_each_bit_identical(tiny):
+    """Requests packed into one batch still match the single-sample
+    reference bit for bit (one request = one microbatch = batch 1)."""
+    params, xs = tiny
+    eng = _engine(params, max_batch=4)
+    reqs = [eng.submit(x, at=0.0) for x in xs[:4]]
+    eng.run_until_idle()
+    s = eng.stats()
+    assert s["batches"] == 1 and s["avg_batch_size"] == 4.0
+    for req, x in zip(reqs, xs):
+        assert req.status == "served"
+        np.testing.assert_array_equal(np.asarray(req.logits),
+                                      _ref(params, x))
+
+
+def test_mixed_resolution_buckets(tiny):
+    """Two resolutions bucket separately (own plans), one weight set;
+    every request still matches its own single-sample reference."""
+    params, xs = tiny
+    rng = np.random.default_rng(1)
+    eng = _engine(params, max_batch=4)
+    reqs = []
+    for i in range(8):
+        shape = TINY_SHAPE if i % 2 else TINY_SHAPE_B
+        reqs.append(eng.submit(
+            np.asarray(rng.normal(size=shape), np.float32), at=0.0))
+    eng.run_until_idle()
+    s = eng.stats()
+    assert len(s["buckets"]) == 2
+    assert {tuple(b["in_shape"]) for b in s["buckets"]} \
+        == {TINY_SHAPE, TINY_SHAPE_B}
+    for req in reqs:
+        assert req.status == "served"
+        ref = np.asarray(cnn_lib.apply_cnn(
+            TINY_LAYERS, params, np.asarray(req.x)[None]))[0]
+        np.testing.assert_array_equal(np.asarray(req.logits), ref)
+
+
+# ---------------------------------------------------------------------------
+# Backpressure + deadlines
+# ---------------------------------------------------------------------------
+def test_queue_full_sheds_with_named_error(tiny):
+    params, xs = tiny
+    eng = _engine(params, max_queue=3)
+    for x in xs[:3]:
+        eng.submit(x, at=0.0)
+    with pytest.raises(QueueFullError) as ei:
+        eng.submit(xs[3], at=0.0)
+    assert isinstance(ei.value.request, CnnRequest)
+    assert ei.value.request.status == "shed"
+    s = eng.stats()
+    assert s["shed"] == 1 and s["submitted"] == 4
+    assert s["events"].get(events.QUEUE_SHED) == 1
+    eng.run_until_idle()
+    assert eng.stats()["served"] == 3       # shed request never served
+
+
+def test_deadline_expired_before_dispatch(tiny):
+    """A queued request whose earliest start already misses its deadline
+    is expired without burning compute."""
+    params, xs = tiny
+    eng = _engine(params, max_batch=1)
+    first = eng.submit(xs[0], at=0.0)
+    # arrives at 0 but can only start after the first request drains
+    late = eng.submit(xs[1], at=0.0, deadline_s=1e-9)
+    eng.run_until_idle()
+    assert first.status == "served"
+    assert late.status == "expired"
+    assert late.logits is None              # never dispatched
+    assert eng.stats()["deadline_expired"] == 1
+    assert eng.stats()["events"].get(events.DEADLINE_EXPIRED) == 1
+
+
+def test_deadline_expired_mid_flight_keeps_result(tiny):
+    """A request that starts in time but finishes late is flagged
+    expired -- and the (late) result is kept, not destroyed."""
+    params, xs = tiny
+    eng = _engine(params)
+    # starts immediately (est start == arrival), but any chain makespan
+    # exceeds this deadline
+    req = eng.submit(xs[0], at=0.0, deadline_s=1e-9)
+    eng.run_until_idle()
+    assert req.status == "expired"
+    assert req.logits is not None           # computed, just late
+    assert req.latency_s > req.deadline_s
+    np.testing.assert_array_equal(np.asarray(req.logits),
+                                  _ref(params, xs[0]))
+    assert eng.stats()["served"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Faults mid-stream
+# ---------------------------------------------------------------------------
+def test_repick_mid_stream_no_cross_batch_corruption(tiny):
+    """Hop 1 is down for a window covering the first batch's transfer:
+    the runtime re-picks a different cut from the Pareto front while
+    later batches sit queued.  Every request -- the degraded batch and
+    the queued ones -- still matches its single-sample reference."""
+    params, xs = tiny
+    hw = paper_chain(3)
+    links = _links(hw, fault_hop=1,
+                   spec=FaultSpec(outages=((0.0, 0.012),)))
+    eng = _engine(params, links=links, max_batch=2,
+                  merge_fallback=False,
+                  policy=RetryPolicy(max_attempts=1, timeout_s=0.01,
+                                     backoff_base_s=0.005))
+    reqs = [eng.submit(x, at=0.0) for x in xs[:6]]
+    eng.run_until_idle()
+    s = eng.stats()
+    assert s["repicks"] >= 1
+    assert s["served"] == 6 and s["failed"] == 0
+    assert s["events"].get(events.REPICK, 0) >= 1
+    for req, x in zip(reqs, xs):
+        np.testing.assert_array_equal(np.asarray(req.logits),
+                                      _ref(params, x))
+
+
+def test_unrecoverable_batch_marked_failed_later_batches_survive(tiny):
+    """A permanently dead hop with merges disabled fails the in-flight
+    batch; once the outage window would matter no more (it covers all
+    time here, so every batch fails) the engine keeps serving order and
+    statuses consistent -- nothing is silently wrong."""
+    params, xs = tiny
+    hw = paper_chain(3)
+    links = _links(hw, fault_hop=1,
+                   spec=FaultSpec(outages=((0.0, 1e9),)))
+    eng = _engine(params, links=links, max_batch=2,
+                  merge_fallback=False,
+                  policy=RetryPolicy(max_attempts=1, timeout_s=0.01,
+                                     backoff_base_s=0.005))
+    reqs = [eng.submit(x, at=0.0) for x in xs[:4]]
+    eng.run_until_idle()
+    s = eng.stats()
+    assert s["failed"] == 4 and s["served"] == 0
+    assert all(r.status == "failed" for r in reqs)
+    assert s["events"].get(events.UNRECOVERABLE, 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Pipelining
+# ---------------------------------------------------------------------------
+def test_pipelined_beats_sequential_throughput():
+    """Cross-request pipelining on the 3-tier clean chain: >= 1.3x
+    requests/sec over the sequential whole-batch baseline (the
+    acceptance bar the serving bench also enforces).  Uses alexnet --
+    its planned chain spreads compute across the tiers, so there is
+    overlap to win (the tiny chain is bottleneck-dominated)."""
+    shape = (3, 64, 64)
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0),
+                              cnn_lib.CNN_MODELS["alexnet"],
+                              in_shape=shape)
+    rng = np.random.default_rng(0)
+    xs = [np.asarray(rng.normal(size=shape), np.float32)
+          for _ in range(16)]
+
+    def run(pipelined):
+        eng = CnnServingEngine({"alexnet": params}, hw=paper_chain(3),
+                               max_batch=4, pipelined=pipelined)
+        for x in xs:
+            eng.submit(x, at=0.0)
+        eng.run_until_idle()
+        return eng.stats()
+
+    sp, sq = run(True), run(False)
+    assert sp["served"] == sq["served"] == len(xs)
+    assert sp["requests_per_s"] >= 1.3 * sq["requests_per_s"]
+    # pipelined span is the overlap win, not a bookkeeping artifact
+    assert sp["virtual_span_s"] < sq["virtual_span_s"]
+
+
+def test_no_clairvoyant_batching(tiny):
+    """A request that arrives after a batch's launch time rides the
+    NEXT batch, even when the first had spare capacity."""
+    params, xs = tiny
+    eng = _engine(params, max_batch=4)
+    eng.submit(xs[0], at=0.0)
+    eng.submit(xs[1], at=1e9)               # far future
+    assert eng.step()                       # dispatches only request 0
+    assert eng.stats()["batches"] == 1
+    assert eng.stats()["avg_batch_size"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Stats shape
+# ---------------------------------------------------------------------------
+def test_stats_hops_schema_matches_chain_runtime(tiny):
+    """Engine per-hop stats carry the ChainRuntime hop keys (plus the
+    serving-level goodput rate), so dashboards can consume either."""
+    params, xs = tiny
+    eng = _engine(params)
+    eng.submit(xs[0])
+    eng.run_until_idle()
+    s = eng.stats()
+    rt = next(iter(eng._buckets.values())).rt
+    chain_keys = set(rt.stats()["hops"][0])
+    for hop in s["hops"]:
+        assert chain_keys <= set(hop)
+        assert "goodput_Bps" in hop
+    assert {"submitted", "queued", "served", "shed", "deadline_expired",
+            "failed", "latency_p50_s", "latency_p99_s",
+            "requests_per_s", "buckets", "hops", "events"} <= set(s)
+
+
+def test_submit_validation(tiny):
+    params, xs = tiny
+    eng = _engine(params)
+    with pytest.raises(ValueError):
+        eng.submit(xs[0], "nope")
+    with pytest.raises(ValueError):
+        eng.submit(xs[0], deadline_s=0.0)
+    with pytest.raises(ValueError):
+        CnnServingEngine({"tiny": (TINY_LAYERS, params)}, max_batch=0)
+    with pytest.raises(ValueError):
+        CnnServingEngine({"tiny": (TINY_LAYERS, params)}, max_queue=0)

@@ -1,0 +1,27 @@
+"""Smoke-execute the runnable examples (tier-1 keeps them honest).
+
+Each example is a subprocess with PYTHONPATH=src, exactly as the README
+tells a user to run it -- so a drifting import or API rename fails the
+gate, not the user.  Only the fast CNN-serving example runs in tier-1;
+the transformer examples spin up bigger models and stay manual.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_batch_serving_example_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "batch_serving.py")],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = proc.stdout
+    assert "served 12/12 mixed-resolution requests" in out
+    assert "backpressure" in out
+    assert "engine stats" in out
