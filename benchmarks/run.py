@@ -62,6 +62,11 @@ def main() -> None:
         sections["serving"] = serving_bench.run_all
     except ImportError:
         pass
+    try:
+        from benchmarks import tier_faults_bench
+        sections["tier_faults"] = tier_faults_bench.run_all
+    except ImportError:
+        pass
 
     emit([], header=True)
     ran = []

@@ -140,6 +140,10 @@ def run_all(smoke: bool = False) -> list[tuple]:
                         "latency_p99_s": s["latency_p99_s"],
                         "served": s["served"],
                         "failed": s["failed"],
+                        "queue_shed": s["queue_shed"],
+                        "deadline_pre_dispatch":
+                            s["deadline_pre_dispatch"],
+                        "deadline_mid_flight": s["deadline_mid_flight"],
                         "batches": s["batches"],
                         "avg_batch_size": s["avg_batch_size"],
                         "repicks": s["repicks"],

@@ -1,0 +1,225 @@
+"""Tier-fault chaos harness: compute-side failures under the recovery
+ladder (circuit breakers + standby-tier failover).
+
+The link-side twin is ``robustness_bench``; this bench injects faults
+into the *tiers* instead -- crash windows, stragglers, memory-pressure
+shedding -- via seeded ``FaultyTier`` models on the shared virtual
+clock, and measures what the six-rung degradation ladder (retry ->
+stage merge -> cached-front re-pick -> standby-tier failover -> device
+fallback -> unrecoverable) costs and whether it ever loses or silently
+corrupts a request.  Per cell we record success rate, added chain
+latency vs a fault-free baseline (p50/p99), failover / device-fallback
+/ breaker-open counts, the NSGA-II run count across recoveries (a
+standby failover must be a cached-front TOPSIS pass, never a GA
+re-run), and the headline guarantee: every request is either
+bit-identical to the fault-free reference or flagged ``degraded`` with
+the recovery on the event log -- never a silent wrong answer.
+
+Headline artifact: ``benchmarks/out/BENCH_tier_faults{_smoke}.json``.
+
+CLI: ``python -m benchmarks.tier_faults_bench [--smoke] [--seeds 0,1,2]``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, time_us
+from repro.core import paper_chain, smartsplit_chain
+from repro.models import cnn as cnn_lib
+from repro.models.profiles import cnn_profile
+from repro.runtime import (ChainRuntime, FaultyLink, FaultyTier,
+                           TierFaultSpec, VirtualClock, microbatch_slices)
+
+nsga2_mod = importlib.import_module("repro.core.nsga2")
+
+# Fault profiles, each targeting the chain's middle tier (the phone,
+# tier 0, never fails: it has no failover story).  The crash window is
+# permanent -- like robustness_bench's dead-hop outage -- so every
+# request provably collides with it and must ride the standby spare;
+# the shed budget is 1 byte for the same reason.  ``merge_fallback`` is
+# disabled on the failing profiles so the ladder cannot stop at a stage
+# merge: the cells exercise breaker-gated standby failover specifically.
+TIER_PROFILES: dict[str, TierFaultSpec] = {
+    "tier_clean": TierFaultSpec(),
+    "tier_crash_window": TierFaultSpec(crash_windows=((0.0, 1e9),)),
+    "tier_straggler": TierFaultSpec(slow_rate=0.6, slow_factor=8.0),
+    "tier_shed": TierFaultSpec(mem_budget=1.0),
+}
+NO_MERGE_PROFILES = ("tier_crash_window", "tier_shed")
+
+CONFIGS_SMOKE = (
+    dict(model="alexnet", num_tiers=3, in_shape=(3, 96, 96), batch=4,
+         requests=3, microbatches=2),
+)
+CONFIGS = CONFIGS_SMOKE + (
+    dict(model="mobilenetv2", num_tiers=4, in_shape=(3, 96, 96), batch=4,
+         requests=3, microbatches=2),
+)
+
+
+def _clean_links(hw, seed: int) -> list[FaultyLink]:
+    clock = VirtualClock()
+    return [FaultyLink(link.bandwidth, seed=seed + k, clock=clock)
+            for k, link in enumerate(hw.links)]
+
+
+def _tier_models(hw, spec: TierFaultSpec, faulty: int, seed: int,
+                 clock: VirtualClock) -> list[FaultyTier]:
+    return [FaultyTier(t.name,
+                       faults=spec if k == faulty else TierFaultSpec(),
+                       seed=seed + k, clock=clock)
+            for k, t in enumerate(hw.tiers)]
+
+
+def run_cell(cfg: dict, profile_name: str, spec: TierFaultSpec,
+             seeds: tuple[int, ...]) -> dict:
+    """One (chain-config, tier-fault-profile) cell across seeds."""
+    model, num_tiers = cfg["model"], cfg["num_tiers"]
+    in_shape, batch = cfg["in_shape"], cfg["batch"]
+    requests, m = cfg["requests"], cfg["microbatches"]
+    hw = paper_chain(num_tiers)
+    prof = cnn_profile(model, batch=batch, in_shape=in_shape)
+    plan = smartsplit_chain(prof, hw, microbatches=m)
+    layers = cnn_lib.CNN_MODELS[model]
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), layers, in_shape)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch,) + in_shape), jnp.float32)
+    faulty = num_tiers // 2
+    merge_fallback = False if profile_name in NO_MERGE_PROFILES else None
+
+    # Fault-free reference logits (same microbatch slices -- XLA convs
+    # are not batch-size-invariant) and fault-free baseline elapsed.
+    outs = [cnn_lib.apply_cnn(layers, params, x[a:b])
+            for a, b in microbatch_slices(batch, m)]
+    ref_np = np.asarray(jnp.concatenate(outs, axis=0))
+    base_rt = ChainRuntime(layers, params, plan, prof, hw,
+                           links=_clean_links(hw, 0), microbatches=m)
+    baseline_s = base_rt.infer(x).chain_elapsed_s
+
+    completed = total = 0
+    bit_identical = True
+    guarantee_held = True
+    added_s: list[float] = []
+    agg = {"failovers": 0, "fallback_device": 0, "merges": 0,
+           "repicks": 0, "breaker_opens": 0, "crashes": 0, "sheds": 0,
+           "slowdowns": 0}
+    ga_before = nsga2_mod.RUN_COUNT
+    ga_construct = 0
+    for seed in seeds:
+        links = _clean_links(hw, seed)
+        clock = links[0]._clock
+        tiers = _tier_models(hw, spec, faulty, seed, clock)
+        ga0 = nsga2_mod.RUN_COUNT
+        rt = ChainRuntime(layers, params, plan, prof, hw, links=links,
+                          microbatches=m, tier_faults=tiers,
+                          merge_fallback=merge_fallback, jitter_seed=seed)
+        ga_construct += nsga2_mod.RUN_COUNT - ga0
+        for _ in range(requests):
+            total += 1
+            r = rt.infer(x)
+            jax.block_until_ready(r.logits)
+            completed += 1
+            added_s.append(max(r.chain_elapsed_s - baseline_s, 0.0))
+            same = bool(np.array_equal(np.asarray(r.logits), ref_np))
+            bit_identical &= same
+            # the never-silently-wrong contract: a non-identical answer
+            # must carry the degraded flag (and its recovery events)
+            guarantee_held &= same or r.degraded
+        s = rt.stats()
+        for k in ("failovers", "fallback_device", "merges", "repicks"):
+            agg[k] += s[k]
+        agg["breaker_opens"] += sum(b["opens"] for b in s["breakers"])
+        for t in s["tiers"]:
+            agg["crashes"] += t["crashes"]
+            agg["sheds"] += t["sheds"]
+            agg["slowdowns"] += t["slowdowns"]
+    return {
+        "model": model, "profile": profile_name,
+        "num_tiers": num_tiers, "faulty_tier": faulty,
+        "cuts": list(plan.cuts), "batch": batch, "microbatches": m,
+        "requests": total, "completed": completed,
+        "success_rate": completed / total,
+        "bit_identical": bit_identical,
+        "guarantee_held": guarantee_held,
+        "baseline_latency_s": baseline_s,
+        "added_latency_p50_s": float(np.percentile(added_s, 50)),
+        "added_latency_p99_s": float(np.percentile(added_s, 99)),
+        # GA runs during *recovery* (standby prewarm at construction is
+        # the one legitimate planning moment; failover must be cache-hit)
+        "nsga2_runs_recovery":
+            nsga2_mod.RUN_COUNT - ga_before - ga_construct,
+        **agg,
+        "faults": {"crash_windows": list(spec.crash_windows),
+                   "slow_rate": spec.slow_rate,
+                   "slow_factor": spec.slow_factor,
+                   "mem_budget": spec.mem_budget},
+        "seeds": list(seeds),
+    }
+
+
+def sweep(*, configs=CONFIGS, profiles=None,
+          seeds=(0, 1, 2)) -> dict:
+    profiles = profiles if profiles is not None else TIER_PROFILES
+    cells = [run_cell(cfg, pname, spec, tuple(seeds))
+             for cfg in configs for pname, spec in profiles.items()]
+    return {"bench": "tier_faults", "hardware": "paper-chain",
+            "cells": cells}
+
+
+def run_all(smoke: bool = False, seeds: tuple[int, ...] | None = None):
+    """Bench-contract entry: returns ``(name, us, derived)`` rows and
+    writes BENCH_tier_faults{_smoke}.json."""
+    seeds = seeds if seeds is not None else (0, 1, 2)
+    configs = CONFIGS_SMOKE if smoke else CONFIGS
+    report = {}
+
+    def build():
+        report["out"] = sweep(configs=configs, seeds=tuple(seeds))
+
+    us = time_us(build, repeats=1, warmup=0)
+    out = report["out"]
+    name = "BENCH_tier_faults_smoke.json" if smoke \
+        else "BENCH_tier_faults.json"
+    path = save_json("", name, out)
+    rows = []
+    for c in out["cells"]:
+        rows.append((
+            f"tier_faults/chain{c['num_tiers']}.{c['model']}"
+            f".{c['profile']}",
+            round(c["added_latency_p50_s"] * 1e6, 1),
+            f"success={c['success_rate']:.2f}"
+            f" bitid={c['bit_identical']}"
+            f" guarantee={c['guarantee_held']}"
+            f" p99_added={c['added_latency_p99_s']:.3f}s"
+            f" failovers={c['failovers']}"
+            f" breaker_opens={c['breaker_opens']}"
+            f" ga_reruns={c['nsga2_runs_recovery']}"))
+    cells = out["cells"]
+    n_ok = sum(c["success_rate"] == 1.0 and c["guarantee_held"]
+               for c in cells)
+    rows.append((f"tier_faults/sweep[{len(cells)}cells]", round(us, 1),
+                 f"all_safe={n_ok}/{len(cells)} -> {path}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seeds", default=None,
+                    help="comma-separated tier/link seeds (e.g. 0,1,2)")
+    args = ap.parse_args()
+    seeds = tuple(int(s) for s in args.seeds.split(",")) \
+        if args.seeds else None
+    from benchmarks.common import emit
+    emit([], header=True)
+    emit(run_all(smoke=args.smoke, seeds=seeds))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -324,6 +324,81 @@ ETH_100MBPS = LinkProfile(name="ethernet-100mbps", bandwidth=100e6 / 8)
 ETH_1GBPS = LinkProfile(name="ethernet-1gbps", bandwidth=1e9 / 8)
 
 
+GALAXY_S21 = DeviceTier(
+    name="samsung-galaxy-s21",
+    cores=8, speed_hz=2.9e9,              # Exynos 2100: 1x2.9 prime core
+    memory_budget=8 * 1024**3,
+    energy_k=PAPER_K,
+)
+
+# Device-tier registry: the phone classes a deployment plans for
+# (flagship / mid-range / low-end) -- ``serve.py`` and the failover
+# tests key tiers by these names.
+DEVICE_TIERS: dict[str, DeviceTier] = {
+    "flagship": GALAXY_S21,
+    "mid": REDMI_NOTE8,
+    "low": SAMSUNG_J6,
+}
+
+# ---------------------------------------------------------------------------
+# Standby tiers (tier-failover targets).
+# ---------------------------------------------------------------------------
+# Each serving-side tier has a warm standby with *slightly different*
+# specs (the spare box in the next rack is rarely identical), so a
+# failed-over chain has a genuinely different Pareto front -- which is
+# why ``core.smartsplit.cached_chain_plan`` memoises fronts per chain
+# and the runtime prewarms the standby fronts at construction.  Phones
+# have no standby: the device tier is the user's hand.
+PAPER_EDGE_STANDBY = DeviceTier(
+    name="paper-edge-standby",
+    cores=6, speed_hz=2.2e9,
+    memory_budget=12 * 1024**3,
+    energy_k=0.0,
+)
+PAPER_REGIONAL_STANDBY = DeviceTier(
+    name="paper-regional-standby",
+    cores=12, speed_hz=2.8e9,
+    memory_budget=24 * 1024**3,
+    energy_k=0.0,
+)
+PAPER_CORE_STANDBY = DeviceTier(
+    name="paper-core-standby",
+    cores=24, speed_hz=3.2e9,
+    memory_budget=48 * 1024**3,
+    energy_k=0.0,
+)
+PAPER_CLOUD_STANDBY = DeviceTier(
+    name="paper-cloud-standby",
+    cores=4, speed_hz=2.0e9,
+    memory_budget=8 * 1024**3,
+    energy_k=0.0,
+)
+
+STANDBY_TIERS: dict[str, DeviceTier] = {
+    PAPER_EDGE.name: PAPER_EDGE_STANDBY,
+    PAPER_REGIONAL.name: PAPER_REGIONAL_STANDBY,
+    PAPER_CORE.name: PAPER_CORE_STANDBY,
+    PAPER_CLOUD.name: PAPER_CLOUD_STANDBY,
+}
+
+
+def standby_for(tier: DeviceTier) -> DeviceTier | None:
+    """The warm standby for ``tier``, or None (device tiers, standbys
+    themselves, and anything unregistered have no failover target)."""
+    return STANDBY_TIERS.get(tier.name)
+
+
+def standby_chain(hw: ChainHardware, tier_idx: int) -> ChainHardware | None:
+    """``hw`` with tier ``tier_idx`` replaced by its standby (same links,
+    same download payload), or None when that tier has no standby."""
+    spare = standby_for(hw.tiers[tier_idx])
+    if spare is None:
+        return None
+    tiers = list(hw.tiers)
+    tiers[tier_idx] = spare
+    return dataclasses.replace(hw, tiers=tuple(tiers))
+
+
 def paper_chain(num_tiers: int) -> ChainHardware:
     """The paper smartphone fronting a K-tier serving chain.
 

@@ -122,6 +122,49 @@ KNOBS: tuple[Knob, ...] = (
          "runtime.transfer.RetryPolicy.from_env",
          "Base backoff after a failed attempt (doubles per retry, "
          "jittered)."),
+    Knob("REPRO_LINK_BACKOFF_FACTOR", "2.0", "float",
+         "runtime.transfer.RetryPolicy.from_env",
+         "Multiplier applied to the backoff base per failed attempt "
+         "(attempt i waits base * factor^(i-1))."),
+    Knob("REPRO_LINK_JITTER", "0.25", "float",
+         "runtime.transfer.RetryPolicy.from_env",
+         "Backoff jitter amplitude: each wait is scaled by "
+         "1 + jitter * U[0,1) from the caller's seeded rng."),
+    # -- tier fault injection (all accept per-tier overrides) -----------
+    Knob("REPRO_TIER_CRASH", "0", "float",
+         "runtime.tier_faults.tier_from_env",
+         "Probability each stage execution crashes on the tier.",
+         per_hop="REPRO_TIER{k}_CRASH"),
+    Knob("REPRO_TIER_CRASH_WINDOWS", "", "windows",
+         "runtime.tier_faults.tier_from_env",
+         "Dead windows in virtual time, `start:end[,start:end...]` "
+         "seconds: every stage overlapping one dies (restart = the "
+         "window ending).", per_hop="REPRO_TIER{k}_CRASH_WINDOWS"),
+    Knob("REPRO_TIER_SLOW", "0", "float",
+         "runtime.tier_faults.tier_from_env",
+         "Straggler probability per stage execution (slowdowns are not "
+         "failures: they never trip breakers).",
+         per_hop="REPRO_TIER{k}_SLOW"),
+    Knob("REPRO_TIER_SLOW_FACTOR", "4.0", "float",
+         "runtime.tier_faults.tier_from_env",
+         "Compute-time multiplier applied when a straggler fault fires.",
+         per_hop="REPRO_TIER{k}_SLOW_FACTOR"),
+    Knob("REPRO_TIER_MEM_BUDGET", "0", "float",
+         "runtime.tier_faults.tier_from_env",
+         "Admission budget in bytes (0 = unlimited): a stage whose "
+         "activation footprint exceeds it is shed before running.",
+         per_hop="REPRO_TIER{k}_MEM_BUDGET"),
+    Knob("REPRO_TIER_MEM_PROFILE", "", "windows",
+         "runtime.tier_faults.tier_from_env",
+         "Time-varying admission budget, `start:budget[,start:budget"
+         "...]` (seconds : bytes), overriding REPRO_TIER_MEM_BUDGET "
+         "from each start time onward.",
+         per_hop="REPRO_TIER{k}_MEM_PROFILE"),
+    Knob("REPRO_TIER_SEED", "0", "int",
+         "runtime.tier_faults.tier_from_env",
+         "Tier fault-schedule seed; on a chain, tier k draws from "
+         "seed+k unless its per-tier knob pins a seed verbatim.",
+         per_hop="REPRO_TIER{k}_SEED"),
     # -- serving engine -------------------------------------------------
     Knob("REPRO_SERVE_MAX_BATCH", "4", "int",
          "serving.cnn_engine.CnnServingEngine",
@@ -167,10 +210,16 @@ _CONST_USE_RE = re.compile(
 # lookup helpers; a literal first arg names a REPRO_LINK_* knob read
 # both chain-wide and as REPRO_LINK{k}_*.
 _WRAPPER_RE = re.compile(r'\b_env_[a-z]+\(\s*["\']([A-Z0-9_]+)["\']')
-# f-string placeholders that index a hop (canonicalised to {k})
+# _tier_env_raw("CRASH", tier) / _tier_env_float(...): the
+# tier_faults.py per-tier lookup helpers -- same contract with the
+# REPRO_TIER_* / REPRO_TIER{k}_* prefix pair.
+_TIER_WRAPPER_RE = re.compile(
+    r'\b_tier_env_[a-z]+\(\s*["\']([A-Z0-9_]+)["\']')
+# f-string placeholders that index a hop or tier (canonicalised to {k})
 _HOP_PLACEHOLDER_RE = re.compile(r'\{(?:k|hop)\}')
 
 _LINK_PREFIX = "REPRO_LINK_"
+_TIER_PREFIX = "REPRO_TIER_"
 
 
 def scan_env_reads(root: str | Path | None = None) -> set[str]:
@@ -208,6 +257,9 @@ def scan_env_reads(root: str | Path | None = None) -> set[str]:
         for suffix in _WRAPPER_RE.findall(text):
             names.add(_LINK_PREFIX + suffix)
             names.add("REPRO_LINK{k}_" + suffix)
+        for suffix in _TIER_WRAPPER_RE.findall(text):
+            names.add(_TIER_PREFIX + suffix)
+            names.add("REPRO_TIER{k}_" + suffix)
     return names
 
 
@@ -234,7 +286,10 @@ def render_markdown() -> str:
         "(`{k}` =",
         "0-based hop id) that overrides the chain-wide value for one "
         "link only --",
-        "how the chaos harness aims a fault at a single hop.",
+        "how the chaos harness aims a fault at a single hop. "
+        "`REPRO_TIER_*` knobs",
+        "override per *tier* the same way (`REPRO_TIER{k}_*`, `{k}` = "
+        "0-based tier id).",
         "",
         "| Knob | Default | Type | Resolved in | Per-hop | What it does |",
         "|---|---|---|---|---|---|",

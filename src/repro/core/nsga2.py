@@ -18,6 +18,11 @@ import numpy as np
 
 from repro.core.pareto import crowding_distance, non_dominated_sort
 
+# Lifetime GA-run count.  The failover tests assert that a standby-tier
+# re-pick is a cached-front TOPSIS pass with NO optimiser re-run by
+# reading this before/after the recovery.
+RUN_COUNT = 0
+
 
 @dataclasses.dataclass(frozen=True)
 class NSGA2Config:
@@ -67,6 +72,8 @@ def nsga2(evaluate: Callable[[np.ndarray], np.ndarray],
     constraint-agnostic; SmartSplit applies the paper's constraints both as
     a penalty here and as the TOPSIS filter, matching Algorithm 1 where the
     reduced matrix F'' drops constraint-violating solutions)."""
+    global RUN_COUNT
+    RUN_COUNT += 1
     lower = np.asarray(lower, np.int64)
     upper = np.asarray(upper, np.int64)
     g = lower.shape[0]

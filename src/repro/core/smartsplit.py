@@ -134,6 +134,71 @@ def repick_split(plan: SplitPlan, profile: ModelProfile,
         tiers=(hw.client.name, hw.server.name))
 
 
+# ---------------------------------------------------------------------------
+# Memoised chain plans (per model x tier-chain x dtype x wire).
+# ---------------------------------------------------------------------------
+# Standby-tier failover must not pay an NSGA-II run on the recovery path:
+# the runtime prewarms the standby chains' plans here at construction, and
+# a breaker-open failover is then one cached-front TOPSIS re-pick
+# (``multicut.repick_chain``).  The cache key captures everything the
+# optimiser's objective matrix depends on.
+
+_PLAN_CACHE: dict[tuple, ChainPlan] = {}
+_CACHE_HITS = 0
+_CACHE_MISSES = 0
+
+
+def _plan_cache_key(profile: ModelProfile, hw, *, microbatches: int,
+                    f3_mode: str, wire) -> tuple:
+    from repro.core.hardware import ChainHardware
+    if not isinstance(hw, ChainHardware):            # TwoTierHardware
+        from repro.core.hardware import chain_of
+        hw = chain_of(hw)
+    wire_key = wire if isinstance(wire, (str, type(None))) else tuple(wire)
+    return (profile.name, profile.num_layers, profile.dtype,
+            tuple(int(b) for b in profile.boundary()),
+            tuple(t.name for t in hw.tiers),
+            tuple((link.name, float(link.bandwidth)) for link in hw.links),
+            int(microbatches), f3_mode, wire_key)
+
+
+def cached_chain_plan(profile: ModelProfile, hw, *, microbatches: int = 1,
+                      f3_mode: str = "full",
+                      wire=None, **kwargs) -> ChainPlan:
+    """``multicut.smartsplit_chain`` behind a per-(model, tier-chain,
+    dtype, wire) memo.  First call per key runs the full planner
+    (exhaustive or NSGA-II); every later call -- notably the failover
+    path re-picking onto a standby chain -- returns the cached plan with
+    its Pareto front intact, so recovery never re-runs the GA."""
+    global _CACHE_HITS, _CACHE_MISSES
+    key = _plan_cache_key(profile, hw, microbatches=microbatches,
+                          f3_mode=f3_mode, wire=wire)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _CACHE_HITS += 1
+        return plan
+    _CACHE_MISSES += 1
+    from repro.core.multicut import smartsplit_chain
+    plan = smartsplit_chain(profile, hw, microbatches=microbatches,
+                            f3_mode=f3_mode, wire=wire, **kwargs)
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+def clear_plan_cache() -> None:
+    """Drop every memoised plan (tests and long-lived servers after a
+    profile change)."""
+    global _CACHE_HITS, _CACHE_MISSES
+    _PLAN_CACHE.clear()
+    _CACHE_HITS = 0
+    _CACHE_MISSES = 0
+
+
+def plan_cache_stats() -> dict[str, int]:
+    return {"hits": _CACHE_HITS, "misses": _CACHE_MISSES,
+            "size": len(_PLAN_CACHE)}
+
+
 def smartsplit_exhaustive(profile: ModelProfile, hw: TwoTierHardware,
                           weights: np.ndarray | None = None,
                           use_anti_ideal: bool = False,

@@ -10,7 +10,10 @@ placement (``--tiers``, K=2 being the paper's phone/cloud environment),
 executes microbatch-pipelined requests across per-hop ``FaultyLink``s
 whose fault profiles come from ``REPRO_LINK_*`` / ``REPRO_LINK{k}_*``
 env knobs (or ``--drop``), and reports recoveries -- retries, stage
-merges, Pareto-front re-picks -- next to throughput."""
+merges, Pareto-front re-picks -- next to throughput.  ``--tier-faults
+{crash,straggler,shed}`` layers a canned compute-side chaos profile on
+the first server tier (over any ``REPRO_TIER_*`` / ``REPRO_TIER{k}_*``
+env config), exercising circuit breakers and standby-tier failover."""
 from __future__ import annotations
 
 import argparse
@@ -29,6 +32,38 @@ from repro.launch.partition import split_boundary_struct
 from repro.models import transformer as T
 from repro.models.profiles import transformer_profile
 from repro.serving.engine import Engine
+
+
+def _tier_fault_models(profile, hw, clock):
+    """Per-tier ``FaultyTier`` list for ``--tier-faults`` / env knobs.
+
+    Env knobs (``REPRO_TIER_*`` / ``REPRO_TIER{k}_*``) are the baseline;
+    a canned ``--tier-faults`` profile then replaces the first server
+    tier's spec (never the phone -- tier 0 failing has no failover
+    story).  Returns ``None`` when everything is fault free so callers
+    keep the unprotected legacy runtime path."""
+    from repro.runtime.tier_faults import (FaultyTier, TierFaultSpec,
+                                           tier_faults_from_env)
+    names = [t.name for t in hw.tiers]
+    tiers = tier_faults_from_env(names, clock=clock)
+    if profile is None:
+        if all(t.faults.fault_free for t in tiers):
+            return None
+        return tiers
+    canned = {
+        # dies for the first quarter-second of virtual time: every early
+        # request hits the window -> breaker trips -> standby failover
+        "crash": TierFaultSpec(crash_windows=((0.0, 0.25),)),
+        # half the stage executions run 6x slow: no failures, just
+        # honest tail latency (TIER_SLOW events)
+        "straggler": TierFaultSpec(slow_rate=0.5, slow_factor=6.0),
+        # 1-byte admission budget: every stage is shed at dispatch
+        "shed": TierFaultSpec(mem_budget=1.0),
+    }[profile]
+    k = 1 if len(names) > 1 else 0
+    tiers[k] = FaultyTier(names[k], faults=canned, seed=tiers[k].seed,
+                          clock=clock)
+    return tiers
 
 
 def serve_cnn_stream(args) -> None:
@@ -53,10 +88,13 @@ def serve_cnn_stream(args) -> None:
             link.faults = FaultSpec(drop_rate=args.drop)
     params = cnn_lib.init_cnn(jax.random.PRNGKey(0),
                               cnn_lib.CNN_MODELS[args.cnn])
+    tier_models = _tier_fault_models(args.tier_faults, hw,
+                                     links[0]._clock if links else None)
     eng = CnnServingEngine(
         {args.cnn: params}, hw=hw, max_batch=args.max_batch,
         pipelined=False if args.no_pipeline else None, dtype=args.dtype,
-        wire=args.wire_dtype, links=links, policy=RetryPolicy.from_env())
+        wire=args.wire_dtype, links=links, tier_faults=tier_models,
+        policy=RetryPolicy.from_env())
     rng = np.random.default_rng(0)
     for i in range(args.concurrency):
         x = rng.normal(size=cnn_lib.INPUT_SHAPE).astype(np.float32)
@@ -74,6 +112,14 @@ def serve_cnn_stream(args) -> None:
           f"p50={s['latency_p50_s'] * 1e3:.1f}ms "
           f"p99={s['latency_p99_s'] * 1e3:.1f}ms) "
           f"repicks={s['repicks']} merges={s['merges']}")
+    if tier_models is not None:
+        for k, (ft, br) in enumerate(zip(s["tiers"], s["breakers"])):
+            print(f"  tier{k}: exec={ft['executions']} "
+                  f"crashes={ft['crashes']} sheds={ft['sheds']} "
+                  f"slow={ft['slowdowns']} breaker={br['state']} "
+                  f"(opened {br['opens']}x)")
+        print(f"  failovers={s['failovers']} "
+              f"fallback_device={s['fallback_device']}")
     for h in s["hops"]:
         link_c = h["link"]
         print(f"  hop{h['hop']}: wire={h['wire_dtype']} "
@@ -125,11 +171,13 @@ def serve_cnn(args) -> None:
     if args.drop:
         for link in links:
             link.faults = FaultSpec(drop_rate=args.drop)
+    tier_models = _tier_fault_models(args.tier_faults, hw,
+                                     links[0]._clock if links else None)
     rt = ChainRuntime(args.cnn, cnn_lib.init_cnn(
         jax.random.PRNGKey(0), cnn_lib.CNN_MODELS[args.cnn]),
         plan, prof, hw, links=links, dtype=policy,
         wire=args.wire_dtype, microbatches=microbatch,
-        policy=RetryPolicy.from_env())
+        tier_faults=tier_models, policy=RetryPolicy.from_env())
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(args.batch,) + cnn_lib.INPUT_SHAPE),
                     jnp.float32)
@@ -144,6 +192,14 @@ def serve_cnn(args) -> None:
           f"merges={s['merges']} repicks={s['repicks']} "
           f"proactive={s['proactive_resplits']} "
           f"active_cuts={s['active_cuts']}")
+    if tier_models is not None:
+        for k, (ft, br) in enumerate(zip(s["tiers"], s["breakers"])):
+            print(f"  tier{k} ({s['active_tiers'][k]}): "
+                  f"exec={ft['executions']} crashes={ft['crashes']} "
+                  f"sheds={ft['sheds']} slow={ft['slowdowns']} "
+                  f"breaker={br['state']} (opened {br['opens']}x)")
+        print(f"  failovers={s['failovers']} "
+              f"fallback_device={s['fallback_device']}")
     for h in s["hops"]:
         link_c = h["link"]
         print(f"  hop{h['hop']}: wire={h['wire_dtype']} "
@@ -166,6 +222,12 @@ def main():
     ap.add_argument("--drop", type=float, default=0.0,
                     help="--cnn only: injected per-attempt drop rate "
                          "(REPRO_LINK_* env knobs cover the rest)")
+    ap.add_argument("--tier-faults", default=None,
+                    choices=("crash", "straggler", "shed"),
+                    help="--cnn only: canned compute-fault profile on the "
+                         "first server tier (layered over REPRO_TIER_* / "
+                         "REPRO_TIER{k}_* env knobs); exercises circuit "
+                         "breakers and standby-tier failover")
     ap.add_argument("--tiers", type=int, default=None,
                     help="--cnn only: chain length K (2=paper phone/cloud, "
                          "3=+edge, 4=+regional; default REPRO_CHAIN_TIERS "

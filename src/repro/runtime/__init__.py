@@ -3,7 +3,10 @@ reliable transfer (checksum/retry/timeout/backoff), EWMA link estimation,
 structured recovery events, and the degradation loops -- ``SplitRuntime``
 for the paper's two-tier case, ``ChainRuntime`` for N-tier chains with
 microbatch pipelining (device fallback / stage merges / cached-Pareto-
-front TOPSIS re-picks)."""
+front TOPSIS re-picks).  The tier-side mirror of the link stack --
+``FaultyTier`` compute-fault models, per-tier circuit breakers, and
+standby-tier failover -- lives in ``tier_faults`` / ``breakers``."""
+from repro.runtime.breakers import CircuitBreaker, tier_breakers
 from repro.runtime.events import Event, EventLog
 from repro.runtime.faults import (FaultSpec, FaultyLink, LinkDropped,
                                   LinkError, LinkOutage, LinkTimeout,
@@ -14,6 +17,10 @@ from repro.runtime.runtime import (ChainInferenceResult, ChainResources,
                                    ChainRuntime, InferenceResult,
                                    SplitRuntime, SplitUnrecoverable,
                                    microbatch_slices)
+from repro.runtime.tier_faults import (FaultyTier, TierCrash, TierError,
+                                       TierFaultSpec, TierShed,
+                                       parse_mem_profile, tier_faults_from_env,
+                                       tier_from_env)
 from repro.runtime.transfer import (ChecksumError, FrameError, RetryPolicy,
                                     TransferFailed, TransferOutcome,
                                     pack_frames, send_with_retry,
@@ -30,6 +37,9 @@ __all__ = [
     "ChainInferenceResult", "ChainResources", "ChainRuntime",
     "InferenceResult", "SplitRuntime", "SplitUnrecoverable",
     "microbatch_slices",
+    "CircuitBreaker", "tier_breakers",
+    "FaultyTier", "TierCrash", "TierError", "TierFaultSpec", "TierShed",
+    "parse_mem_profile", "tier_faults_from_env", "tier_from_env",
     "ChecksumError", "FrameError", "RetryPolicy", "TransferFailed",
     "TransferOutcome", "pack_frames", "send_with_retry", "unpack_frames",
     "BoundaryMeta", "decode_boundary", "encode_boundary",

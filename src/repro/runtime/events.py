@@ -31,6 +31,13 @@ PROACTIVE_RESPLIT = "proactive_resplit"  # EWMA-triggered re-split
 UNRECOVERABLE = "unrecoverable"      # no fallback or re-pick remained
 QUEUE_SHED = "queue_shed"            # serving engine rejected: queue full
 DEADLINE_EXPIRED = "deadline_expired"  # request missed its deadline
+TIER_CRASH = "tier_crash"            # stage died on its tier (crash/window)
+TIER_SHED = "tier_shed"              # stage rejected: tier memory pressure
+TIER_SLOW = "tier_slow"              # straggler stretched a stage's compute
+BREAKER_OPEN = "breaker_open"        # consecutive tier failures tripped it
+BREAKER_HALF_OPEN = "breaker_half_open"  # cooldown elapsed; probe admitted
+BREAKER_CLOSE = "breaker_close"      # probe succeeded; tier back in rotation
+TIER_FAILOVER = "tier_failover"      # re-picked onto a standby-tier chain
 
 
 @dataclasses.dataclass(frozen=True)

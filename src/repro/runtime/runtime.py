@@ -38,14 +38,19 @@ from repro.core.costs import (ModelProfile, _tier_compute_time,
                               resolve_chain_wire)
 from repro.core.dtype_policy import conv_dtype, resolve_wire_dtype
 from repro.core.hardware import (ChainHardware, NetworkState,
-                                 TwoTierHardware, chain_of)
+                                 TwoTierHardware, chain_of, standby_chain,
+                                 standby_for)
 from repro.core.multicut import repick_chain
-from repro.core.smartsplit import SplitPlan, repick_split
+from repro.core.smartsplit import (SplitPlan, cached_chain_plan,
+                                   repick_split)
 from repro.models import cnn as cnn_lib
 from repro.runtime import events as ev
+from repro.runtime.breakers import OPEN, CircuitBreaker, tier_breakers
 from repro.runtime.events import Event, EventLog
 from repro.runtime.faults import FaultyLink, VirtualClock
 from repro.runtime.link_estimator import EwmaLinkEstimator, chain_estimators
+from repro.runtime.tier_faults import (FaultyTier, TierCrash, TierError,
+                                       TierShed)
 from repro.runtime.transfer import (RetryPolicy, TransferFailed,
                                     send_with_retry)
 from repro.runtime.wire import decode_boundary, encode_boundary
@@ -110,6 +115,9 @@ class SplitRuntime:
                  estimator_alpha: float = 0.3,
                  resplit_ratio: float = 2.0,
                  jitter_seed: int = 0,
+                 tier_faults: list[FaultyTier] | None = None,
+                 breakers: list[CircuitBreaker] | None = None,
+                 standby: bool = True,
                  log: EventLog | None = None):
         self.layers = cnn_lib.CNN_MODELS[model] if isinstance(model, str) \
             else model
@@ -137,12 +145,27 @@ class SplitRuntime:
         self.net = NetworkState(hw.link)
         self.log = log if log is not None else EventLog()
         self._jitter_rng = np.random.default_rng(jitter_seed)
+        if tier_faults is not None and len(tier_faults) != 2:
+            raise ValueError(
+                f"SplitRuntime takes 2 tier-fault models (client, "
+                f"server), got {len(tier_faults)}")
+        self.tier_faults = tier_faults
+        if breakers is None and tier_faults is not None:
+            breakers = tier_breakers([hw.client.name, hw.server.name],
+                                     log=self.log)
+        if breakers is not None and len(breakers) != 2:
+            raise ValueError(
+                f"SplitRuntime takes 2 breakers, got {len(breakers)}")
+        self.breakers = breakers
+        self.standby = bool(standby)
+        self._cm = profile.cum_mem()
         # aggregate counters (the chaos harness reads these)
         self.n_requests = 0
         self.n_recovered = 0        # completed despite >= 1 failed attempt
         self.n_fallback_device = 0
         self.n_repicks = 0
         self.n_proactive = 0
+        self.n_failovers = 0
         # per-hop transfer counters (one hop here; the chain runtime has
         # K-1 -- same stats schema so the chaos artifact can always say
         # *which* hop degraded)
@@ -202,6 +225,64 @@ class SplitRuntime:
             self.plan = new
             self.n_proactive += 1
 
+    def _vet_server(self, l1: int):
+        """Breaker-gate + fault-vet the server stage for one request.
+
+        None = healthy (dispatch).  Otherwise ``(transient, cause)`` for
+        the degradation ladder: ``transient`` False means the tier is
+        known-down (open breaker, active crash window) and a cut re-pick
+        onto the same box would be futile."""
+        t = self.link.clock
+        if self.breakers is not None and not self.breakers[1].allow(t):
+            return False, "breaker_open"
+        if self.tier_faults is None:
+            return None
+        ft = self.tier_faults[1]
+        mem = float(self._cm[-1] - self._cm[l1])
+        try:
+            # compute_s=0: SplitRuntime's clock accounts link time only,
+            # so the model vets (crash / shed) without stretching time.
+            ft.execute(t, 0.0, mem_bytes=mem)
+        except TierError as fail:
+            kind = ev.TIER_SHED if isinstance(fail, TierShed) \
+                else ev.TIER_CRASH
+            self.log.emit(kind, t, tier=1, split=l1, error=str(fail))
+            if self.breakers is not None:
+                self.breakers[1].record_failure(t)
+            transient = not (isinstance(fail, TierCrash)
+                             and ft.in_crash_window(t))
+            return transient, kind
+        if self.breakers is not None:
+            self.breakers[1].record_success(t)
+        return None
+
+    def _tier_failover(self) -> SplitPlan | None:
+        """Swap the server for its warm standby and TOPSIS re-pick over
+        the plan's cached front (never a GA re-run); None when disabled
+        or no standby is registered for the current server."""
+        if not self.standby:
+            return None
+        spare = standby_for(self.hw.server)
+        if spare is None:
+            return None
+        old = self.hw.server.name
+        hw = dataclasses.replace(self.hw, server=spare)
+        try:
+            new = repick_split(self.plan, self.profile, hw,
+                               bandwidth=self.estimator.bandwidth)
+        except ValueError:
+            return None
+        self.hw = hw
+        if self.tier_faults is not None:
+            self.tier_faults[1] = FaultyTier(spare.name)
+        if self.breakers is not None:
+            self.breakers[1].reset()
+        self.n_failovers += 1
+        self.log.emit(ev.TIER_FAILOVER, self.link.clock, tier=1,
+                      old_tier=old, new_tier=spare.name,
+                      new_split=new.split_index)
+        return new
+
     # -- the request loop ----------------------------------------------
     def infer(self, x) -> InferenceResult:
         """Run one request to completion (or raise SplitUnrecoverable).
@@ -220,6 +301,7 @@ class SplitRuntime:
         wire = goodput = 0
         t0 = self.link.clock
         tried: tuple[int, ...] = ()
+        tier_degraded = False
         l1 = planned
         while True:
             boundary = self._run(x, 0, l1)
@@ -249,11 +331,45 @@ class SplitRuntime:
                 self.estimator.observe(out.goodput_bytes,
                                        out.success_elapsed_s)
                 self.net.update(self.estimator.bandwidth)
-                logits = self._run(
-                    decode_boundary(out.payload, meta,
-                                    backend=self.backend), l1, L)
-                on_device = False
-                break
+                verdict = self._vet_server(l1)
+                if verdict is None:
+                    logits = self._run(
+                        decode_boundary(out.payload, meta,
+                                        backend=self.backend), l1, L)
+                    on_device = False
+                    break
+                # Server-tier degradation ladder: re-pick (transient
+                # failures only) -> standby failover -> on-device
+                # fallback -> give up.
+                tier_degraded = True
+                tried = tried + (l1,)
+                transient, cause = verdict
+                if transient:
+                    new = self._repick(exclude=tried, kind=ev.REPICK)
+                    if new is not None:
+                        self.plan = new
+                        self.n_repicks += 1
+                        l1 = new.split_index
+                        continue
+                new = self._tier_failover()
+                if new is not None:
+                    self.plan = new
+                    l1 = new.split_index
+                    tried = ()
+                    continue
+                if self._device_ok():
+                    self.log.emit(ev.FALLBACK_DEVICE, self.link.clock,
+                                  split=l1, cause=cause)
+                    self.n_fallback_device += 1
+                    logits = self._run(boundary, l1, L)
+                    on_device = True
+                    break
+                self.log.emit(ev.UNRECOVERABLE, self.link.clock,
+                              tried=list(tried), cause=cause)
+                raise SplitUnrecoverable(
+                    f"server tier failed ({cause}); no standby, "
+                    f"on-device fallback infeasible and Pareto front "
+                    f"exhausted")
             except TransferFailed as fail:
                 attempts += fail.attempts
                 wire += fail.wire_bytes
@@ -283,7 +399,7 @@ class SplitRuntime:
                 self.n_repicks += 1
                 l1 = new.split_index
         self.net.update(self.estimator.bandwidth, outage=False)
-        degraded = bool(tried) or l1 != planned
+        degraded = bool(tried) or l1 != planned or tier_degraded
         if degraded or attempts > 1:
             self.n_recovered += 1
         return InferenceResult(
@@ -302,10 +418,15 @@ class SplitRuntime:
             "fallback_device": self.n_fallback_device,
             "repicks": self.n_repicks,
             "proactive_resplits": self.n_proactive,
+            "failovers": self.n_failovers,
             "active_split": self.plan.split_index,
             "est_bandwidth": self.estimator.bandwidth,
             "degradation": self.estimator.degradation(),
             "link": self.link.counters(),
+            "tiers": None if self.tier_faults is None else
+                [ft.counters() for ft in self.tier_faults],
+            "breakers": None if self.breakers is None else
+                [br.counters() for br in self.breakers],
             "hops": [{
                 "hop": 0,
                 "wire_dtype": self.wire,
@@ -411,19 +532,35 @@ class ChainRuntime:
     same layers whatever the timing, so concatenated logits stay
     bit-identical to the single-device reference.
 
-    Degradation ladder when a hop exhausts its retries:
+    Degradation ladder (six rungs) when a hop exhausts its retries or a
+    tier fails a stage (``tier_faults`` crash/shed, open breaker):
 
-    1. **stage merge** -- fold the downstream stage onto the upstream
-       tier (collapse the cut) if the merged stage fits that tier's
-       memory budget; the dead hop drops out of the chain for the rest
-       of the request and later microbatches.  For K=2 this is exactly
-       the on-device fallback.  Links are overlay paths: after a merge
-       the data crosses the *next* surviving hop's link.
-    2. **chain re-pick** -- TOPSIS over the plan's cached Pareto front
+    1. **retry** -- the transfer layer's bounded retries with backoff
+       (link failures only; a crashed tier is not retried in place).
+    2. **stage merge** -- fold the stage across the dead resource onto
+       the upstream tier (collapse the cut) if the merged stage fits
+       that tier's memory budget; the dead hop/tier drops out of the
+       chain for the rest of the request and later microbatches.  For
+       K=2 this is exactly the on-device fallback.
+    3. **chain re-pick** -- TOPSIS over the plan's cached Pareto front
        under the current per-hop bandwidth estimates
        (``core.multicut.repick_chain``), never repeating a failed cut
        vector; the request restarts its current microbatch from tier 0.
-    3. ``SplitUnrecoverable`` when neither remains.
+       Skipped for *persistent* tier failures (open breaker, active
+       crash window): every cut vector routes through every tier, so a
+       re-pick onto the same dead box would be futile.
+    4. **tier failover** -- swap the failed tier for its registered
+       warm standby (``core.hardware.standby_for``) and re-pick from
+       the standby chain's memoised Pareto front
+       (``core.smartsplit.cached_chain_plan``) in one TOPSIS pass --
+       never an NSGA-II re-run on the recovery path.
+    5. **full on-device fallback** -- run the whole model on tier 0
+       when it fits the device memory budget.
+    6. ``SplitUnrecoverable`` when nothing remains.
+
+    Rungs 4-5 extend the link-failure ladder only when the tier-fault
+    layer is active (``tier_faults``/``breakers`` passed); unprotected
+    runtimes keep the legacy merge -> re-pick -> unrecoverable contract.
 
     microbatches: pipeline depth M (default: REPRO_CHAIN_MICROBATCH env,
       else the plan's own ``microbatches`` field); clamped to the batch.
@@ -450,6 +587,16 @@ class ChainRuntime:
       an explicit value makes microbatch compute time proportional to
       the slice's own sample count -- a per-sample profile
       (``profile_batch=1``) then prices variable-size batches correctly.
+    tier_faults: optional per-tier ``FaultyTier`` models (length K,
+      shared virtual clock) vetting every stage execution -- crash
+      windows, stragglers, memory-pressure shedding.
+    breakers: optional per-tier ``CircuitBreaker`` list gating dispatch;
+      auto-built (threshold 3, cooldown 1s) when ``tier_faults`` is
+      given.  An open breaker at request start triggers a *proactive*
+      failover next to the EWMA-driven proactive re-pick.
+    standby: allow rung-4 standby-tier failover (default True).  The
+      standby chains' Pareto fronts are prewarmed at construction so the
+      failover itself is cache-hit + TOPSIS only.
     """
 
     def __init__(self, model: str | list, params, plan: ChainPlan,
@@ -467,6 +614,9 @@ class ChainRuntime:
                  resources: ChainResources | None = None,
                  estimators: list[EwmaLinkEstimator] | None = None,
                  profile_batch: int | None = None,
+                 tier_faults: list[FaultyTier] | None = None,
+                 breakers: list[CircuitBreaker] | None = None,
+                 standby: bool = True,
                  log: EventLog | None = None):
         if isinstance(hw, TwoTierHardware):
             hw = chain_of(hw)
@@ -534,12 +684,39 @@ class ChainRuntime:
         self._jitter_rng = np.random.default_rng(jitter_seed)
         self._cm = profile.cum_mem()
         self._cf = profile.cum_flops()
+        if tier_faults is not None and len(tier_faults) != hw.num_tiers:
+            raise ValueError(
+                f"{hw.num_tiers} tiers need {hw.num_tiers} tier-fault "
+                f"models, got {len(tier_faults)}")
+        self.tier_faults = tier_faults
+        if breakers is None and tier_faults is not None:
+            breakers = tier_breakers([t.name for t in hw.tiers],
+                                     log=self.log)
+        if breakers is not None and len(breakers) != hw.num_tiers:
+            raise ValueError(
+                f"{hw.num_tiers} tiers need {hw.num_tiers} breakers, "
+                f"got {len(breakers)}")
+        self.breakers = breakers
+        self.standby = bool(standby)
+        # The failover / on-device rungs extend the LINK-failure ladder
+        # only when the tier-fault layer is active: an unprotected
+        # runtime keeps the legacy merge -> re-pick -> unrecoverable
+        # contract.
+        self._protected = tier_faults is not None or breakers is not None
+        if self.standby and self._protected:
+            # Prewarm the standby chains' Pareto fronts now (the one
+            # place the full planner may run) so a breaker-open failover
+            # later is a pure cached-front TOPSIS pass.
+            for k in range(hw.num_tiers):
+                self._standby_plan(k)
         # aggregate counters (the chaos harness reads these)
         self.n_requests = 0
         self.n_recovered = 0
         self.n_merges = 0
         self.n_repicks = 0
         self.n_proactive = 0
+        self.n_failovers = 0
+        self.n_fallback_device = 0
         n_hops = len(self.links)
         self.hop_attempts = [0] * n_hops
         self.hop_wire_bytes = [0] * n_hops
@@ -598,6 +775,66 @@ class ChainRuntime:
             self.plan = new
             self.n_proactive += 1
 
+    def _standby_plan(self, tier_id: int):
+        """(standby hardware, memoised base plan) for replacing tier
+        ``tier_id``, or (None, None) when it has no registered standby.
+        First call per chain runs the planner; later calls (the failover
+        path) hit ``core.smartsplit``'s plan cache."""
+        new_hw = standby_chain(self.hw, tier_id)
+        if new_hw is None:
+            return None, None
+        base = cached_chain_plan(self.profile, new_hw,
+                                 microbatches=self.plan.microbatches,
+                                 wire=self.wire_dtypes)
+        return new_hw, base
+
+    def _failover(self, tier_id: int, t: float) -> ChainPlan | None:
+        """Swap tier ``tier_id`` for its warm standby: one TOPSIS pass
+        over the standby chain's cached front under the current per-hop
+        bandwidth estimates -- never an NSGA-II re-run.  Mutates the
+        runtime's hardware/plan/fault state on success; None when no
+        standby exists (or standby failover is disabled)."""
+        if not self.standby:
+            return None
+        old = self.hw.tiers[tier_id].name
+        new_hw, base = self._standby_plan(tier_id)
+        if new_hw is None:
+            return None
+        try:
+            new = repick_chain(base, self.profile, new_hw,
+                               bandwidths=self._bandwidths())
+        except ValueError:
+            return None
+        self.hw = new_hw
+        self.plan = new
+        if self.tier_faults is not None:
+            # the standby starts healthy: fault-free model, same clock
+            self.tier_faults[tier_id] = FaultyTier(
+                new_hw.tiers[tier_id].name, clock=self.clock)
+        if self.breakers is not None:
+            self.breakers[tier_id].reset()
+        self.n_failovers += 1
+        self.log.emit(ev.TIER_FAILOVER, t, tier=tier_id, old_tier=old,
+                      new_tier=new_hw.tiers[tier_id].name,
+                      cuts=list(new.cuts))
+        return new
+
+    def _device_fallback_ok(self) -> bool:
+        """May the whole model run on the device tier (ladder rung 5)?"""
+        return float(self._cm[-1]) <= self.hw.tiers[0].memory_budget
+
+    def _maybe_proactive_failover(self) -> None:
+        """An open breaker at request start triggers failover *before*
+        dispatch -- the tier-side analogue of the EWMA-driven proactive
+        re-pick (don't burn a request against a box known to be down)."""
+        if self.breakers is None:
+            return
+        t = self.clock.now
+        for tier_id, br in enumerate(self.breakers):
+            if br.state == OPEN and t < br.opened_at + br.cooldown_s:
+                if self._failover(tier_id, t) is not None:
+                    self.n_proactive += 1
+
     # -- the request loop ----------------------------------------------
     def infer(self, x, *, at: float | None = None) -> ChainInferenceResult:
         """Run one request through the chain (or raise
@@ -619,6 +856,7 @@ class ChainRuntime:
         self.n_requests += 1
         mark = len(self.log)
         self._maybe_proactive_repick()
+        self._maybe_proactive_failover()
         planned_cuts = self.plan.cuts
         L = len(self.layers)
         t0 = self.clock.now if at is None else float(at)
@@ -644,6 +882,7 @@ class ChainRuntime:
         merged: tuple[int, ...] = ()
         tried: tuple[tuple[int, ...], ...] = ()
         repicked = False
+        fell_back = False
         outs = []
         mb_finish: list[float] = []
         finish = t0
@@ -668,6 +907,115 @@ class ChainRuntime:
                     size = slices[m][1] - slices[m][0]
                     dt = self._stage_seconds(tier_id, layer, stop) \
                         * (size / self.profile_batch)
+                # Breaker gate + tier-fault vetting before the stage runs.
+                tier_fail: TierError | None = None
+                rejected = False
+                if stop > layer and self.breakers is not None \
+                        and not self.breakers[tier_id].allow(t_start):
+                    rejected = True
+                    t_fail = t_start
+                elif stop > layer and self.tier_faults is not None:
+                    try:
+                        actual = self.tier_faults[tier_id].execute(
+                            t_start, dt,
+                            mem_bytes=float(self._cm[stop]
+                                            - self._cm[layer]))
+                        if actual > dt:
+                            self.log.emit(ev.TIER_SLOW, t_start,
+                                          tier=tier_id, stage=s,
+                                          modelled_s=dt, actual_s=actual)
+                            dt = actual
+                        if self.breakers is not None:
+                            self.breakers[tier_id].record_success(
+                                t_start + dt)
+                    except TierError as fail:
+                        tier_fail = fail
+                        t_fail = t_start + fail.elapsed_s
+                if rejected or tier_fail is not None:
+                    # Tier-failure ladder: upstream stage merge ->
+                    # cached-front re-pick (transient failures only) ->
+                    # standby failover -> on-device fallback -> give up.
+                    tier_free[tier_id] = t_fail
+                    ready = t_fail
+                    persistent = rejected
+                    if tier_fail is not None:
+                        kind = ev.TIER_SHED \
+                            if isinstance(tier_fail, TierShed) \
+                            else ev.TIER_CRASH
+                        self.log.emit(kind, t_fail, tier=tier_id,
+                                      stage=s, error=str(tier_fail))
+                        if self.breakers is not None:
+                            self.breakers[tier_id].record_failure(t_fail)
+                        persistent = isinstance(tier_fail, TierCrash) \
+                            and self.tier_faults[tier_id] \
+                            .in_crash_window(t_fail)
+                    if not rejected and s > 0 and \
+                            self._merge_ok(tiers[s - 1], edges[s - 1],
+                                           edges[s + 1]):
+                        # Fold the failed stage back onto the upstream
+                        # tier: it recomputes [layer, stop) from the
+                        # boundary it already holds (the transfer was
+                        # bit-exact), and the dead tier drops out of
+                        # the chain for the rest of the request.
+                        dead_hop = hops[s - 1]
+                        self.log.emit(ev.STAGE_MERGE, t_fail,
+                                      hop=dead_hop, tier=tiers[s - 1],
+                                      cut=edges[s],
+                                      merged_stop=edges[s + 1])
+                        self.n_merges += 1
+                        self.hop_merges[dead_hop] += 1
+                        merged = merged + (dead_hop,)
+                        del edges[s]
+                        del tiers[s]
+                        del hops[s - 1]
+                        s -= 1
+                        continue
+                    if not persistent:
+                        tried = tried + (tuple(self.plan.cuts),)
+                        new = self._repick(exclude=tried, kind=ev.REPICK)
+                        if new is not None:
+                            self.plan = new
+                            self.n_repicks += 1
+                            repicked = True
+                            edges = list(new.edges)
+                            tiers = list(range(len(edges) - 1))
+                            hops = list(range(len(edges) - 2))
+                            cur = x_m
+                            layer = 0
+                            s = 0
+                            ready = t_fail
+                            continue
+                    new = self._failover(tier_id, t_fail)
+                    if new is not None:
+                        repicked = True
+                        tried = ()
+                        edges = list(new.edges)
+                        tiers = list(range(len(edges) - 1))
+                        hops = list(range(len(edges) - 2))
+                        cur = x_m
+                        layer = 0
+                        s = 0
+                        ready = t_fail
+                        continue
+                    if not fell_back and self._device_fallback_ok():
+                        self.log.emit(ev.FALLBACK_DEVICE, t_fail,
+                                      tier=tier_id, stage=s)
+                        self.n_fallback_device += 1
+                        fell_back = True
+                        edges = [0, L]
+                        tiers = [0]
+                        hops = []
+                        cur = x_m
+                        layer = 0
+                        s = 0
+                        ready = t_fail
+                        continue
+                    self.log.emit(ev.UNRECOVERABLE, t_fail, tier=tier_id,
+                                  tried=[list(c) for c in tried])
+                    raise SplitUnrecoverable(
+                        f"tier {tier_id} failed; merge, re-pick, "
+                        f"failover and on-device fallback all "
+                        f"unavailable") from tier_fail
                 if stop > layer:
                     cur = self._run(cur, layer, stop)
                 tier_free[tier_id] = t_start + dt
@@ -733,6 +1081,29 @@ class ChainRuntime:
                         continue
                     tried = tried + (tuple(self.plan.cuts),)
                     new = self._repick(exclude=tried, kind=ev.REPICK)
+                    if new is None and self._protected:
+                        # ladder rungs 4/5 (tier-fault deployments):
+                        # fail the dead hop's downstream tier over to
+                        # its standby, else run fully on the device
+                        new = self._failover(tiers[s + 1], t_fail)
+                        if new is not None:
+                            tried = ()
+                        elif not fell_back and self._device_fallback_ok():
+                            self.log.emit(ev.FALLBACK_DEVICE, t_fail,
+                                          hop=hop_id)
+                            self.n_fallback_device += 1
+                            fell_back = True
+                            edges = [0, L]
+                            tiers = [0]
+                            hops = []
+                            cur = x_m
+                            layer = 0
+                            s = 0
+                            ready = t_fail
+                            continue
+                    elif new is not None:
+                        self.plan = new
+                        self.n_repicks += 1
                     if new is None:
                         self.log.emit(ev.UNRECOVERABLE, t_fail,
                                       tried=[list(c) for c in tried],
@@ -741,8 +1112,6 @@ class ChainRuntime:
                             f"hop {hop_id} failed; stage merge infeasible "
                             f"and chain Pareto front exhausted "
                             f"(tried {list(tried)})") from fail
-                    self.plan = new
-                    self.n_repicks += 1
                     repicked = True
                     # restart this microbatch from tier 0 on the new cuts
                     edges = list(new.edges)
@@ -757,7 +1126,7 @@ class ChainRuntime:
             finish = max(finish, ready)
         self.clock.advance_to(finish)
         logits = outs[0] if M == 1 else jnp.concatenate(outs, axis=0)
-        degraded = bool(merged) or repicked
+        degraded = bool(merged) or repicked or fell_back
         if degraded or retries:
             self.n_recovered += 1
         return ChainInferenceResult(
@@ -778,8 +1147,15 @@ class ChainRuntime:
             "merges": self.n_merges,
             "repicks": self.n_repicks,
             "proactive_resplits": self.n_proactive,
+            "failovers": self.n_failovers,
+            "fallback_device": self.n_fallback_device,
             "active_cuts": list(self.plan.cuts),
+            "active_tiers": [t.name for t in self.hw.tiers],
             "microbatches": self.microbatches,
+            "tiers": None if self.tier_faults is None else
+                [ft.counters() for ft in self.tier_faults],
+            "breakers": None if self.breakers is None else
+                [br.counters() for br in self.breakers],
             "hops": [{
                 "hop": k,
                 "wire_dtype": self.wire_dtypes[k],

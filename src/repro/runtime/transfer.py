@@ -113,7 +113,8 @@ class TransferFailed(RuntimeError):
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Per-transfer reliability knobs (env: REPRO_LINK_RETRIES /
-    REPRO_LINK_TIMEOUT / REPRO_LINK_BACKOFF via ``RetryPolicy.from_env``).
+    REPRO_LINK_TIMEOUT / REPRO_LINK_BACKOFF / REPRO_LINK_BACKOFF_FACTOR /
+    REPRO_LINK_JITTER via ``RetryPolicy.from_env``).
 
     Attempt i (1-based) waits ``backoff_base_s * backoff_factor**(i-1)``
     -- scaled by ``1 + jitter * U[0,1)`` from the caller's seeded rng --
@@ -149,7 +150,9 @@ class RetryPolicy:
         return cls(
             max_attempts=int(get(ENV_PREFIX + "RETRIES", 4)),
             timeout_s=float(get(ENV_PREFIX + "TIMEOUT", 5.0)),
-            backoff_base_s=float(get(ENV_PREFIX + "BACKOFF", 0.05)))
+            backoff_base_s=float(get(ENV_PREFIX + "BACKOFF", 0.05)),
+            backoff_factor=float(get(ENV_PREFIX + "BACKOFF_FACTOR", 2.0)),
+            jitter=float(get(ENV_PREFIX + "JITTER", 0.25)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,12 +170,20 @@ class TransferOutcome:
     def retransmitted_bytes(self) -> int:
         return self.wire_bytes - self.goodput_bytes
 
+    # A zero-virtual-time win (e.g. a mocked or infinitely fast link)
+    # must not hand callers an infinite bandwidth: one `inf` folded into
+    # an EWMA poisons every later `degradation()` ratio (1/inf -> 0 ->
+    # permanent "degraded" verdict).  Clamp to a finite ceiling instead.
+    BANDWIDTH_CLAMP = 1e18          # bytes/s; ~8 exabit/s, safely absurd
+
     @property
     def observed_bandwidth(self) -> float:
-        """Goodput of the winning attempt -- the EWMA estimator's input."""
+        """Goodput of the winning attempt -- the EWMA estimator's input.
+        Finite by construction (see ``BANDWIDTH_CLAMP``)."""
         if self.success_elapsed_s <= 0:
-            return float("inf")
-        return self.goodput_bytes / self.success_elapsed_s
+            return self.BANDWIDTH_CLAMP
+        return min(self.goodput_bytes / self.success_elapsed_s,
+                   self.BANDWIDTH_CLAMP)
 
 
 _FAIL_KINDS = {LinkDropped: ev.DROP, LinkTimeout: ev.TIMEOUT,

@@ -34,6 +34,13 @@ instead of one synchronous call at a time:
   ``ChainRuntime``, so retries, stage merges, and Pareto-front re-picks
   all work mid-stream; a re-pick triggered by one batch never corrupts
   later queued batches (each request's samples still walk every layer).
+* **Breaker-aware dispatch.**  Pass ``tier_faults`` (and optionally
+  ``breakers``) and every bucket runtime shares ONE ``FaultyTier`` list
+  and ONE ``CircuitBreaker`` per tier: a tier that trips while serving
+  bucket A is already open when bucket B dispatches, so B fails over
+  proactively instead of burning a doomed attempt.  A standby-tier
+  failover in one bucket resets the shared breaker and heals the shared
+  fault model -- later batches from *any* bucket ride the spare.
 
 Numerics: in pipelined mode (the default) one request = one microbatch,
 so every request's logits are computed at its own batch size and are
@@ -60,8 +67,10 @@ from repro.core.multicut import smartsplit_chain
 from repro.models import cnn as cnn_lib
 from repro.models.profiles import cnn_profile
 from repro.runtime import events as ev
+from repro.runtime.breakers import CircuitBreaker, tier_breakers
 from repro.runtime.events import EventLog
 from repro.runtime.faults import FaultyLink, VirtualClock
+from repro.runtime.tier_faults import FaultyTier
 from repro.runtime.link_estimator import chain_estimators
 from repro.runtime.runtime import (ChainInferenceResult, ChainResources,
                                    ChainRuntime, SplitUnrecoverable)
@@ -152,6 +161,15 @@ class CnnServingEngine:
       dtype and wire are part of the bucket key).
     links: per-hop ``FaultyLink``s on one shared clock (default: fault
       free at the chain's nominal bandwidths) -- inject faults here.
+    tier_faults: one ``FaultyTier`` per tier (compute-side faults),
+      shared by every bucket runtime -- one health model per physical
+      tier, not per bucket.
+    breakers: one ``CircuitBreaker`` per tier, likewise shared; default
+      when ``tier_faults`` is given: ``tier_breakers`` on this engine's
+      event log.
+    standby: allow standby-tier failover inside the bucket runtimes
+      (see ``ChainRuntime``); the swap heals the shared fault model so
+      all buckets benefit.
     """
 
     def __init__(self, models, *,
@@ -164,6 +182,9 @@ class CnnServingEngine:
                  backend: str | None = None,
                  policy: RetryPolicy = RetryPolicy(),
                  links: list[FaultyLink] | None = None,
+                 tier_faults: list[FaultyTier] | None = None,
+                 breakers: list[CircuitBreaker] | None = None,
+                 standby: bool = True,
                  merge_fallback: bool | None = None,
                  estimator_alpha: float = 0.3,
                  jitter_seed: int = 0,
@@ -222,6 +243,24 @@ class CnnServingEngine:
         self.estimator_alpha = estimator_alpha
         self.jitter_seed = int(jitter_seed)
         self.log = log if log is not None else EventLog()
+        if tier_faults is not None and len(tier_faults) != hw.num_tiers:
+            raise ValueError(
+                f"{hw.num_tiers} tiers need {hw.num_tiers} tier_faults, "
+                f"got {len(tier_faults)}")
+        if breakers is not None and len(breakers) != hw.num_tiers:
+            raise ValueError(
+                f"{hw.num_tiers} tiers need {hw.num_tiers} breakers, "
+                f"got {len(breakers)}")
+        # One FaultyTier + one breaker per *physical* tier, shared across
+        # every bucket runtime (built here so per-bucket ChainRuntimes
+        # don't each auto-build their own disconnected set).
+        self.tier_faults = list(tier_faults) if tier_faults is not None \
+            else None
+        if breakers is None and tier_faults is not None:
+            breakers = tier_breakers([t.name for t in hw.tiers],
+                                     log=self.log)
+        self.breakers = list(breakers) if breakers is not None else None
+        self.standby = bool(standby)
         self._buckets: dict[tuple, _Bucket] = {}
         self._seq_free = 0.0    # sequential mode: prior batch's makespan
         self._rid = 0
@@ -230,6 +269,8 @@ class CnnServingEngine:
         self.n_served = 0
         self.n_shed = 0
         self.n_expired = 0
+        self.n_expired_queued = 0   # expired before dispatch (phase=queued)
+        self.n_expired_mid = 0      # finished past deadline (in_flight)
         self.n_failed = 0
         self.n_batches = 0
         self._batch_sizes: list[int] = []
@@ -302,6 +343,8 @@ class CnnServingEngine:
             layers, params, plan, prof, self.hw, links=self.links,
             policy=self.policy, backend=self.backend, dtype=self._storage,
             wire=self._wire, microbatches=n_micro,
+            tier_faults=self.tier_faults, breakers=self.breakers,
+            standby=self.standby,
             merge_fallback=self.merge_fallback,
             estimator_alpha=self.estimator_alpha,
             jitter_seed=self.jitter_seed + len(self._buckets),
@@ -320,6 +363,10 @@ class CnnServingEngine:
     def _expire(self, req: CnnRequest, t: float, phase: str) -> None:
         req.status = "expired"
         self.n_expired += 1
+        if phase == "queued":
+            self.n_expired_queued += 1
+        else:
+            self.n_expired_mid += 1
         self.log.emit(ev.DEADLINE_EXPIRED, t, rid=req.rid, phase=phase,
                       arrival_s=req.arrival_s, deadline_s=req.deadline_s)
 
@@ -426,7 +473,10 @@ class CnnServingEngine:
             "queued": self.n_pending,
             "served": self.n_served,
             "shed": self.n_shed,
+            "queue_shed": self.n_shed,
             "deadline_expired": self.n_expired,
+            "deadline_pre_dispatch": self.n_expired_queued,
+            "deadline_mid_flight": self.n_expired_mid,
             "failed": self.n_failed,
             "batches": self.n_batches,
             "avg_batch_size": float(np.mean(self._batch_sizes))
@@ -442,10 +492,18 @@ class CnnServingEngine:
             "merges": sum(rt.n_merges for rt in runtimes),
             "repicks": sum(rt.n_repicks for rt in runtimes),
             "proactive_resplits": sum(rt.n_proactive for rt in runtimes),
+            "failovers": sum(rt.n_failovers for rt in runtimes),
+            "fallback_device": sum(rt.n_fallback_device
+                                   for rt in runtimes),
+            "tiers": None if self.tier_faults is None else
+                [ft.counters() for ft in self.tier_faults],
+            "breakers": None if self.breakers is None else
+                [br.counters() for br in self.breakers],
             "buckets": [{
                 "model": b.key[0], "in_shape": list(b.key[1]),
                 "dtype": b.key[2], "wire": list(b.key[3]),
                 "cuts": list(b.rt.plan.cuts),
+                "tiers": [t.name for t in b.rt.hw.tiers],
                 "pending": len(b.pending), "served": b.served,
                 "batches": b.batches,
             } for b in self._buckets.values()],

@@ -48,6 +48,9 @@ def test_scanner_sees_known_knobs():
     assert "REPRO_LINK_RETRIES" in scanned          # ENV_PREFIX + "RETRIES"
     assert "REPRO_LINK{k}_WIRE_DTYPE" in scanned    # per-hop f-string
     assert "REPRO_LINK{k}_DROP" in scanned          # _env_float("DROP", ...)
+    assert "REPRO_TIER_CRASH" in scanned            # _tier_env_float(...)
+    assert "REPRO_TIER{k}_CRASH_WINDOWS" in scanned  # per-tier wrapper
+    assert "REPRO_LINK_BACKOFF_FACTOR" in scanned   # RetryPolicy.from_env
 
 
 def test_knobs_md_up_to_date():

@@ -19,8 +19,9 @@ from repro.models.cnn import avgpool, conv, linear, maxpool, relu
 from repro.models.profiles import cnn_profile
 from repro.runtime import (EventLog, EwmaLinkEstimator, FaultSpec,
                            FaultyLink, RetryPolicy, SplitRuntime,
-                           SplitUnrecoverable, TransferFailed, events,
-                           link_from_env, parse_outages, send_with_retry)
+                           SplitUnrecoverable, TransferFailed,
+                           TransferOutcome, events, link_from_env,
+                           parse_outages, send_with_retry)
 
 # ---------------------------------------------------------------------------
 # Shared tiny model: 7 layers, plans in microseconds, runs in milliseconds.
@@ -221,6 +222,42 @@ def test_retry_policy_from_env(monkeypatch):
     monkeypatch.setenv("REPRO_LINK_TIMEOUT", "2.5")
     p = RetryPolicy.from_env()
     assert p.max_attempts == 7 and p.timeout_s == 2.5
+    # defaults survive when the env says nothing
+    assert p.backoff_factor == 2.0 and p.jitter == 0.25
+
+
+def test_retry_policy_from_env_backoff_round_trip(monkeypatch):
+    """REPRO_LINK_BACKOFF_FACTOR / REPRO_LINK_JITTER round-trip through
+    from_env and land in the backoff schedule."""
+    monkeypatch.setenv("REPRO_LINK_BACKOFF", "0.1")
+    monkeypatch.setenv("REPRO_LINK_BACKOFF_FACTOR", "3.0")
+    monkeypatch.setenv("REPRO_LINK_JITTER", "0.5")
+    p = RetryPolicy.from_env()
+    assert p.backoff_factor == 3.0 and p.jitter == 0.5
+    assert p.backoff_s(2) == pytest.approx(0.3)
+    assert p.backoff_s(2, u=1.0) == pytest.approx(0.45)
+    # env values still go through __post_init__ validation
+    monkeypatch.setenv("REPRO_LINK_BACKOFF_FACTOR", "0.5")
+    with pytest.raises(ValueError):
+        RetryPolicy.from_env()
+
+
+def test_observed_bandwidth_is_finite_for_instant_transfers():
+    """A zero-virtual-time win must not feed `inf` into the EWMA
+    estimator (regression: 1/inf -> 0 -> permanent degraded verdict)."""
+    out = TransferOutcome(payload=b"x", attempts=1, elapsed_s=0.0,
+                          success_elapsed_s=0.0, wire_bytes=9,
+                          goodput_bytes=9)
+    assert out.observed_bandwidth == TransferOutcome.BANDWIDTH_CLAMP
+    assert np.isfinite(out.observed_bandwidth)
+    # a merely absurd-but-positive time still clamps
+    fast = TransferOutcome(payload=b"x", attempts=1, elapsed_s=1e-30,
+                           success_elapsed_s=1e-30, wire_bytes=9,
+                           goodput_bytes=9)
+    assert fast.observed_bandwidth == TransferOutcome.BANDWIDTH_CLAMP
+    est = EwmaLinkEstimator(1000.0, alpha=0.5)
+    est.observe(out.observed_bandwidth, 1.0)
+    assert np.isfinite(est.bandwidth) and np.isfinite(est.degradation())
 
 
 # ---------------------------------------------------------------------------

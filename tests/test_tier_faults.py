@@ -1,0 +1,578 @@
+"""Tier-level fault injection, circuit breakers, and standby failover.
+
+Deterministic like tests/test_chain_runtime.py: crash windows, seeded
+fault draws, and the shared virtual clock force exact failure/recovery
+sequences.  The acceptance sweep at the bottom pins the PR's contract:
+under crash-window and straggler profiles on three fixed seeds, every
+request is either bit-identical to the fault-free reference or carries
+recorded failover/fallback events (success rate 1.0, never a silent
+wrong answer), and a standby failover never re-runs the NSGA-II
+optimiser -- it is one TOPSIS pass over the memoised Pareto front."""
+import dataclasses
+import importlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import PAPER_ENV_J6, paper_chain, smartsplit_chain, \
+    smartsplit_exhaustive
+from repro.core.hardware import (DEVICE_TIERS, STANDBY_TIERS, standby_chain,
+                                 standby_for)
+from repro.core.smartsplit import (cached_chain_plan, clear_plan_cache,
+                                   plan_cache_stats)
+from repro.models import cnn as cnn_lib
+from repro.models.cnn import avgpool, conv, linear, maxpool, relu
+from repro.models.profiles import cnn_profile
+from repro.runtime import (ChainRuntime, CircuitBreaker, FaultyLink,
+                           FaultyTier, SplitRuntime, SplitUnrecoverable,
+                           TierCrash, TierFaultSpec, TierShed, VirtualClock,
+                           events, microbatch_slices, parse_mem_profile,
+                           tier_breakers, tier_faults_from_env,
+                           tier_from_env)
+
+# ``repro.core`` re-exports the nsga2 *function*, which shadows the
+# submodule under `import a.b as x` semantics -- go through importlib.
+nsga2_mod = importlib.import_module("repro.core.nsga2")
+
+TINY_LAYERS = [conv(8, 3, 1, 1), relu(), maxpool(2, 2),
+               conv(16, 3, 1, 1), relu(), avgpool(2), linear(10)]
+TINY_SHAPE = (3, 16, 16)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = cnn_lib.init_cnn(jax.random.PRNGKey(0), TINY_LAYERS,
+                              TINY_SHAPE)
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.normal(size=(4,) + TINY_SHAPE), np.float32)
+    return params, x
+
+
+def _chain_plan(K=3, microbatches=1):
+    prof = cnn_profile("tiny", in_shape=TINY_SHAPE, layers=TINY_LAYERS)
+    hw = paper_chain(K)
+    return prof, hw, smartsplit_chain(prof, hw, microbatches=microbatches)
+
+
+def _links(hw, seed=0):
+    clock = VirtualClock()
+    return [FaultyLink(link.bandwidth, clock=clock, seed=seed + k)
+            for k, link in enumerate(hw.links)]
+
+
+def _tiers(hw, clock, spec=None, faulty=1, seed=0):
+    return [FaultyTier(t.name,
+                       faults=spec if k == faulty and spec is not None
+                       else TierFaultSpec(),
+                       seed=seed + k, clock=clock)
+            for k, t in enumerate(hw.tiers)]
+
+
+def _full_ref(params, x):
+    return np.asarray(cnn_lib.apply_cnn(TINY_LAYERS, params, x))
+
+
+# ---------------------------------------------------------------------------
+# TierFaultSpec + FaultyTier unit behaviour
+# ---------------------------------------------------------------------------
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        TierFaultSpec(crash_rate=1.5)
+    with pytest.raises(ValueError):
+        TierFaultSpec(slow_rate=-0.1)
+    with pytest.raises(ValueError):
+        TierFaultSpec(slow_factor=0.5)
+    with pytest.raises(ValueError):
+        TierFaultSpec(mem_budget=-1)
+    with pytest.raises(ValueError):
+        TierFaultSpec(crash_windows=((2.0, 1.0),))
+    assert TierFaultSpec().fault_free
+    assert not TierFaultSpec(slow_rate=0.1).fault_free
+
+
+def test_faulty_tier_is_seed_deterministic():
+    def outcomes(seed):
+        ft = FaultyTier("t", faults=TierFaultSpec(crash_rate=0.4,
+                                                  slow_rate=0.3,
+                                                  slow_factor=2.0),
+                        seed=seed)
+        out = []
+        for i in range(32):
+            try:
+                out.append(round(ft.execute(float(i), 0.5), 6))
+            except TierCrash:
+                out.append("crash")
+        return out
+
+    a, b, c = outcomes(7), outcomes(7), outcomes(8)
+    assert a == b
+    assert a != c
+    assert "crash" in a and any(isinstance(v, float) for v in a)
+
+
+def test_faulty_tier_draws_are_outcome_invariant():
+    """The rng consumes the same number of draws per call whatever the
+    outcome, so one tier's fault schedule does not depend on payload
+    sizes or on which faults actually fired."""
+    spec = TierFaultSpec(crash_rate=0.3)
+    a = FaultyTier("t", faults=spec, seed=3)
+    b = FaultyTier("t", faults=spec, seed=3)
+    seq_a, seq_b = [], []
+    for i in range(24):
+        try:
+            a.execute(float(i), 0.1, mem_bytes=1.0)
+            seq_a.append("ok")
+        except TierCrash:
+            seq_a.append("crash")
+        try:  # different compute/mem args, same draw schedule
+            b.execute(float(i), 7.0, mem_bytes=1e9)
+            seq_b.append("ok")
+        except TierCrash:
+            seq_b.append("crash")
+    assert seq_a == seq_b
+
+
+def test_crash_window_and_overlap():
+    ft = FaultyTier("t", faults=TierFaultSpec(
+        crash_windows=((1.0, 2.0), (5.0, 6.0))))
+    assert ft.in_crash_window(1.0) and not ft.in_crash_window(2.0)
+    assert ft.crash_overlaps(0.5, 1.5) and ft.crash_overlaps(1.9, 5.1)
+    assert not ft.crash_overlaps(2.0, 5.0)
+    with pytest.raises(TierCrash):
+        ft.execute(0.9, 0.5)        # runs into the window mid-stage
+    assert ft.window_hits == 1
+    assert ft.execute(2.0, 0.5) == 0.5
+
+
+def test_mem_budget_shed_and_profile():
+    ft = FaultyTier("t", faults=TierFaultSpec(mem_budget=100.0))
+    with pytest.raises(TierShed):
+        ft.execute(0.0, 0.1, mem_bytes=101.0)
+    assert ft.sheds == 1
+    assert ft.execute(0.0, 0.1, mem_bytes=100.0) == 0.1
+    # piecewise budget: unlimited until t=1, then 10 bytes, then free
+    prof = FaultyTier("t", faults=TierFaultSpec(
+        mem_profile=((1.0, 10.0), (2.0, 0.0))))
+    assert prof.budget_at(0.5) == 0.0           # 0 = unlimited
+    assert prof.budget_at(1.5) == 10.0
+    assert prof.budget_at(2.5) == 0.0
+    prof.execute(0.5, 0.01, mem_bytes=1e9)      # before the squeeze
+    with pytest.raises(TierShed):
+        prof.execute(1.5, 0.01, mem_bytes=11.0)
+    prof.execute(2.5, 0.01, mem_bytes=1e9)      # squeeze lifted
+
+
+def test_straggler_stretches_not_fails():
+    ft = FaultyTier("t", faults=TierFaultSpec(slow_rate=1.0,
+                                              slow_factor=4.0))
+    assert ft.execute(0.0, 0.5) == pytest.approx(2.0)
+    assert ft.slowdowns == 1 and ft.crashes == 0
+
+
+# ---------------------------------------------------------------------------
+# Env knob round-trips
+# ---------------------------------------------------------------------------
+def test_parse_mem_profile():
+    assert parse_mem_profile("0:100, 2.5:0") == ((0.0, 100.0), (2.5, 0.0))
+    assert parse_mem_profile("") == ()
+
+
+def test_tier_from_env_round_trip(monkeypatch):
+    monkeypatch.setenv("REPRO_TIER_CRASH", "0.25")
+    monkeypatch.setenv("REPRO_TIER_CRASH_WINDOWS", "1:2")
+    monkeypatch.setenv("REPRO_TIER_SLOW", "0.5")
+    monkeypatch.setenv("REPRO_TIER_SLOW_FACTOR", "8")
+    monkeypatch.setenv("REPRO_TIER_MEM_BUDGET", "1024")
+    monkeypatch.setenv("REPRO_TIER_SEED", "9")
+    ft = tier_from_env("edge")
+    assert ft.faults.crash_rate == 0.25
+    assert ft.faults.crash_windows == ((1.0, 2.0),)
+    assert ft.faults.slow_rate == 0.5 and ft.faults.slow_factor == 8.0
+    assert ft.faults.mem_budget == 1024.0
+    assert ft.seed == 9
+    # explicit args beat env
+    ft = tier_from_env("edge", faults=TierFaultSpec(), seed=1)
+    assert ft.faults.fault_free and ft.seed == 1
+
+
+def test_per_tier_env_override(monkeypatch):
+    """REPRO_TIER1_* beats the chain-wide REPRO_TIER_* for tier 1 only,
+    and per-tier seeds default to base+k but pin via REPRO_TIER{k}_SEED."""
+    monkeypatch.setenv("REPRO_TIER_CRASH", "0.1")
+    monkeypatch.setenv("REPRO_TIER1_CRASH", "0.9")
+    monkeypatch.setenv("REPRO_TIER_SEED", "100")
+    monkeypatch.setenv("REPRO_TIER2_SEED", "7")
+    tiers = tier_faults_from_env(["phone", "edge", "cloud"])
+    assert [t.name for t in tiers] == ["phone", "edge", "cloud"]
+    assert tiers[0].faults.crash_rate == 0.1
+    assert tiers[1].faults.crash_rate == 0.9
+    assert tiers[2].faults.crash_rate == 0.1
+    assert tiers[0].seed == 100 and tiers[1].seed == 101
+    assert tiers[2].seed == 7
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine
+# ---------------------------------------------------------------------------
+def test_breaker_walks_closed_open_halfopen_closed():
+    from repro.runtime.breakers import CLOSED, HALF_OPEN, OPEN
+    from repro.runtime.events import EventLog
+    log = EventLog()
+    br = CircuitBreaker("edge", failure_threshold=3, cooldown_s=1.0,
+                        log=log)
+    assert br.state == CLOSED
+    assert br.record_failure(0.1) is False
+    assert br.record_failure(0.2) is False
+    assert br.record_failure(0.3) is True           # trips
+    assert br.state == OPEN and br.opened_at == 0.3
+    assert not br.allow(0.5)                        # cooling down
+    assert br.n_rejected == 1
+    assert br.allow(1.4)                            # past cooldown: probe
+    assert br.state == HALF_OPEN
+    br.record_success(1.5)
+    assert br.state == CLOSED and br.failures == 0
+    assert log.count(events.BREAKER_OPEN) == 1
+    assert log.count(events.BREAKER_HALF_OPEN) == 1
+    assert log.count(events.BREAKER_CLOSE) == 1
+
+
+def test_breaker_probe_failure_reopens():
+    from repro.runtime.breakers import OPEN
+    br = CircuitBreaker("edge", failure_threshold=1, cooldown_s=1.0)
+    br.record_failure(0.0)
+    assert br.state == OPEN
+    assert br.allow(1.1)                            # half-open probe
+    assert br.record_failure(1.2) is True           # probe failed
+    assert br.state == OPEN and br.opened_at == 1.2
+    assert not br.allow(1.3)
+    # an intervening success in CLOSED resets the consecutive count
+    br2 = CircuitBreaker("t", failure_threshold=2)
+    br2.record_failure(0.0)
+    br2.record_success(0.1)
+    assert br2.record_failure(0.2) is False
+    assert br2.failures == 1
+
+
+def test_tier_breakers_builder():
+    brs = tier_breakers(["a", "b"], failure_threshold=5, cooldown_s=2.0)
+    assert [b.name for b in brs] == ["a", "b"]
+    assert all(b.failure_threshold == 5 and b.cooldown_s == 2.0
+               for b in brs)
+
+
+# ---------------------------------------------------------------------------
+# Standby registry + plan-front memoisation
+# ---------------------------------------------------------------------------
+def test_standby_registry_covers_server_tiers_only():
+    hw = paper_chain(4)
+    # every non-device tier has a standby; standbys themselves do not
+    # (no failover chains), and neither do the phones
+    for tier in hw.tiers[1:]:
+        spare = standby_for(tier)
+        assert spare is not None and spare.name != tier.name
+        assert standby_for(spare) is None
+    assert standby_for(hw.tiers[0]) is None
+    for phone in DEVICE_TIERS.values():
+        assert standby_for(phone) is None
+    served = {t.name for t in paper_chain(4).tiers[1:]} \
+        | {t.name for t in paper_chain(2).tiers[1:]}
+    assert set(STANDBY_TIERS) == served
+
+
+def test_standby_chain_replaces_one_tier():
+    hw = paper_chain(3)
+    new = standby_chain(hw, 1)
+    assert new is not None
+    assert new.tiers[1].name == standby_for(hw.tiers[1]).name
+    assert new.tiers[0] is hw.tiers[0] and new.tiers[2] is hw.tiers[2]
+    assert new.links == hw.links
+    assert standby_chain(hw, 0) is None             # the phone: no spare
+
+
+def test_plan_cache_memoises_by_chain_key():
+    clear_plan_cache()
+    prof, hw, _ = _chain_plan(3)
+    p1 = cached_chain_plan(prof, hw)
+    assert plan_cache_stats() == {"hits": 0, "misses": 1, "size": 1}
+    p2 = cached_chain_plan(prof, hw)
+    assert p2 is p1
+    assert plan_cache_stats()["hits"] == 1
+    other = standby_chain(hw, 1)
+    p3 = cached_chain_plan(prof, other)
+    assert p3 is not p1
+    assert plan_cache_stats() == {"hits": 1, "misses": 2, "size": 2}
+    clear_plan_cache()
+    assert plan_cache_stats() == {"hits": 0, "misses": 0, "size": 0}
+
+
+# ---------------------------------------------------------------------------
+# ChainRuntime degradation ladder, rung by rung
+# ---------------------------------------------------------------------------
+def test_straggler_slows_but_stays_clean(tiny):
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    links = _links(hw)
+    tiers = _tiers(hw, links[0]._clock,
+                   TierFaultSpec(slow_rate=1.0, slow_factor=8.0))
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers)
+    base = ChainRuntime(TINY_LAYERS, params, plan, prof, hw,
+                        links=_links(hw)).infer(x)
+    r = rt.infer(x)
+    assert not r.degraded
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  _full_ref(params, x))
+    assert rt.log.count(events.TIER_SLOW) >= 1
+    assert r.chain_elapsed_s > base.chain_elapsed_s
+    assert rt.stats()["tiers"][1]["slowdowns"] >= 1
+
+
+def test_crash_merges_onto_upstream_tier(tiny):
+    """Rung 2: a crashed middle stage folds onto the tier that already
+    holds its input boundary -- same layers, same bytes, bit-identical."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    links = _links(hw)
+    tiers = _tiers(hw, links[0]._clock,
+                   TierFaultSpec(crash_windows=((0.0, 1e9),)), faulty=2)
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers)
+    r = rt.infer(x)
+    assert r.degraded and r.merged_hops
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  _full_ref(params, x))
+    assert rt.log.count(events.TIER_CRASH) >= 1
+    assert rt.log.count(events.STAGE_MERGE) >= 1
+    assert rt.n_failovers == 0
+
+
+def test_crash_window_fails_over_to_standby(tiny):
+    """Rung 4: merge disabled, in-window crash is persistent (re-pick
+    skipped) -> cached-front failover onto the standby tier."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    links = _links(hw)
+    tiers = _tiers(hw, links[0]._clock,
+                   TierFaultSpec(crash_windows=((0.0, 1e9),)))
+    before = nsga2_mod.RUN_COUNT
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers, merge_fallback=False)
+    after_init = nsga2_mod.RUN_COUNT
+    r = rt.infer(x)
+    assert rt.n_failovers == 1 and r.degraded
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  _full_ref(params, x))
+    # the standby is live in the runtime's hardware and stats
+    spare = standby_for(hw.tiers[1]).name
+    assert rt.hw.tiers[1].name == spare
+    assert rt.stats()["active_tiers"][1] == spare
+    fo = [e for e in rt.log.events if e.kind == events.TIER_FAILOVER]
+    assert len(fo) == 1 and fo[0].detail["new_tier"] == spare
+    # re-pick rung skipped: the failure was persistent
+    assert rt.log.count(events.REPICK) == 0
+    # failover itself never runs the GA (prewarm at init is allowed)
+    assert nsga2_mod.RUN_COUNT == after_init
+    # the healed tier model replaces the crashed one in-place
+    assert tiers[1].faults.fault_free
+    # follow-up requests ride the spare cleanly
+    r2 = rt.infer(x)
+    assert not r2.degraded
+    np.testing.assert_array_equal(np.asarray(r2.logits),
+                                  _full_ref(params, x))
+    del before
+
+
+def test_breaker_trips_then_proactive_failover(tiny):
+    """Consecutive shed failures trip the breaker; the NEXT request sees
+    it open at dispatch and fails over before burning an attempt."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    links = _links(hw)
+    # permanent shed on tier 1 (transient per-failure, so the ladder
+    # re-picks/merges its way through while failures accumulate)
+    tiers = _tiers(hw, links[0]._clock, TierFaultSpec(mem_budget=1.0))
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers)
+    r1 = rt.infer(x)
+    assert r1.degraded
+    np.testing.assert_array_equal(np.asarray(r1.logits),
+                                  _full_ref(params, x))
+    assert rt.log.count(events.TIER_SHED) >= 1
+    assert rt.stats()["breakers"][1]["opens"] >= 0  # schema present
+    # drive until the breaker has tripped and failover has happened
+    for _ in range(6):
+        if rt.n_failovers:
+            break
+        rt.infer(x)
+    assert rt.n_failovers >= 1
+    assert rt.log.count(events.BREAKER_OPEN) >= 1
+
+
+def test_device_fallback_when_no_standby(tiny):
+    """Rung 5: standby disabled -> the whole model runs on the phone."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    links = _links(hw)
+    tiers = _tiers(hw, links[0]._clock,
+                   TierFaultSpec(crash_windows=((0.0, 1e9),)))
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers, merge_fallback=False,
+                      standby=False)
+    r = rt.infer(x)
+    assert r.degraded and rt.n_fallback_device == 1
+    assert rt.n_failovers == 0
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  _full_ref(params, x))
+    assert rt.log.count(events.FALLBACK_DEVICE) == 1
+
+
+def test_unrecoverable_when_every_rung_exhausted(tiny):
+    """Rung 6: no merge, no standby, phone too small -> raise."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    phone = dataclasses.replace(hw.tiers[0], memory_budget=1.0)
+    hw = dataclasses.replace(hw, tiers=(phone,) + tuple(hw.tiers[1:]))
+    links = _links(hw)
+    tiers = _tiers(hw, links[0]._clock,
+                   TierFaultSpec(crash_windows=((0.0, 1e9),)))
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers, merge_fallback=False,
+                      standby=False)
+    with pytest.raises(SplitUnrecoverable):
+        rt.infer(x)
+    assert rt.log.count(events.UNRECOVERABLE) == 1
+
+
+def test_unprotected_runtime_keeps_legacy_contract(tiny):
+    """Without tier_faults/breakers the link-failure ladder must NOT
+    grow failover/device rungs: a dead hop with merge disabled is still
+    unrecoverable (the PR-4 contract, pinned by the existing suite)."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    from repro.runtime import FaultSpec
+    clock = VirtualClock()
+    links = [FaultyLink(link.bandwidth, clock=clock, seed=k,
+                        faults=FaultSpec(outages=((0.0, 1e9),))
+                        if k == 1 else FaultSpec())
+             for k, link in enumerate(hw.links)]
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      merge_fallback=False)
+    with pytest.raises(SplitUnrecoverable):
+        rt.infer(x)
+
+
+def test_protected_runtime_survives_dead_link_via_failover(tiny):
+    """With the tier layer active, a permanently dead link escalates
+    past the exhausted re-pick rung into standby failover instead of
+    raising."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3)
+    from repro.runtime import FaultSpec
+    clock = VirtualClock()
+    links = [FaultyLink(link.bandwidth, clock=clock, seed=k,
+                        faults=FaultSpec(outages=((0.0, 1e9),))
+                        if k == 1 else FaultSpec())
+             for k, link in enumerate(hw.links)]
+    tiers = _tiers(hw, clock)               # all fault-free, but protected
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers, merge_fallback=False)
+    r = rt.infer(x)
+    assert r.degraded
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  _full_ref(params, x))
+    assert rt.n_failovers + rt.n_fallback_device >= 1
+
+
+# ---------------------------------------------------------------------------
+# Two-tier SplitRuntime mirror
+# ---------------------------------------------------------------------------
+def test_split_runtime_server_crash_fails_over(tiny):
+    params, x = tiny
+    prof = cnn_profile("tiny", in_shape=TINY_SHAPE, layers=TINY_LAYERS)
+    plan = smartsplit_exhaustive(prof, PAPER_ENV_J6)
+    clock = VirtualClock()
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth, clock=clock)
+    tiers = [FaultyTier(PAPER_ENV_J6.client.name, clock=clock),
+             FaultyTier(PAPER_ENV_J6.server.name,
+                        faults=TierFaultSpec(crash_windows=((0.0, 1e9),)),
+                        clock=clock)]
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link, tier_faults=tiers)
+    r = rt.infer(x)
+    assert r.degraded and rt.n_failovers == 1
+    assert rt.hw.server.name == standby_for(PAPER_ENV_J6.server).name
+    # bit-identical to apply_split at the split that actually executed
+    ref, _ = cnn_lib.apply_split(TINY_LAYERS, params, x, r.split_index)
+    np.testing.assert_array_equal(np.asarray(r.logits), np.asarray(ref))
+    assert rt.log.count(events.TIER_FAILOVER) == 1
+    assert rt.stats()["failovers"] == 1
+
+
+def test_split_runtime_shed_repicks_first(tiny):
+    """A transient shed walks the re-pick rung before failover."""
+    params, x = tiny
+    prof = cnn_profile("tiny", in_shape=TINY_SHAPE, layers=TINY_LAYERS)
+    plan = smartsplit_exhaustive(prof, PAPER_ENV_J6)
+    l1 = plan.split_index
+    cm = prof.cum_mem()
+    # budget squeezed so the planned split sheds but a later cut fits
+    budget = float(cm[-1] - cm[l1]) - 1.0
+    clock = VirtualClock()
+    link = FaultyLink(PAPER_ENV_J6.link.bandwidth, clock=clock)
+    tiers = [FaultyTier("phone", clock=clock),
+             FaultyTier("cloud", faults=TierFaultSpec(mem_budget=budget),
+                        clock=clock)]
+    rt = SplitRuntime(TINY_LAYERS, params, plan, prof, PAPER_ENV_J6,
+                      link=link, tier_faults=tiers)
+    r = rt.infer(x)
+    assert r.degraded
+    assert rt.log.count(events.TIER_SHED) >= 1
+    assert rt.n_repicks >= 1 or rt.n_failovers >= 1
+    ref, _ = cnn_lib.apply_split(TINY_LAYERS, params, x, r.split_index,
+                                 )
+    np.testing.assert_array_equal(np.asarray(r.logits), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance sweep: 3 fixed seeds x {crash-window, straggler}
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("profile,spec,merge", [
+    ("crash_window", TierFaultSpec(crash_windows=((0.0, 1e9),)), False),
+    ("straggler", TierFaultSpec(slow_rate=0.6, slow_factor=8.0), None),
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_acceptance_never_silent_wrong_answer(tiny, profile, spec, merge,
+                                              seed):
+    """The PR contract: under tier chaos every request is bit-identical
+    to the fault-free reference OR carries recorded recovery events --
+    success rate 1.0, and failover never re-runs NSGA-II."""
+    params, x = tiny
+    prof, hw, plan = _chain_plan(3, microbatches=2)
+    links = _links(hw, seed=seed)
+    tiers = _tiers(hw, links[0]._clock, spec, seed=seed)
+    rt = ChainRuntime(TINY_LAYERS, params, plan, prof, hw, links=links,
+                      tier_faults=tiers, merge_fallback=merge,
+                      jitter_seed=seed, microbatches=2)
+    ga_after_init = nsga2_mod.RUN_COUNT
+    outs = [cnn_lib.apply_cnn(TINY_LAYERS, params, x[a:b])
+            for a, b in microbatch_slices(x.shape[0], 2)]
+    ref = np.concatenate([np.asarray(o) for o in outs], axis=0)
+    completed = 0
+    for _ in range(4):
+        r = rt.infer(x)
+        completed += 1
+        same = bool(np.array_equal(np.asarray(r.logits), ref))
+        if not same:
+            assert r.degraded, "silent wrong answer"
+            kinds = {e.kind for e in r.events}
+            assert kinds & {events.TIER_FAILOVER, events.FALLBACK_DEVICE,
+                            events.STAGE_MERGE, events.REPICK}
+    assert completed == 4                           # success rate 1.0
+    assert nsga2_mod.RUN_COUNT == ga_after_init     # no GA during serving
+    if profile == "crash_window":
+        assert rt.n_failovers == 1
+        assert rt.log.count(events.TIER_FAILOVER) == 1
+    else:
+        assert rt.log.count(events.TIER_SLOW) >= 1
+        assert rt.n_failovers == 0
